@@ -1,0 +1,55 @@
+"""Baseline vs optimized dry-run comparison (EXPERIMENTS.md §Perf annex).
+
+Reads artifacts/dryrun (baseline, paper-faithful shardings as first
+lowered) and artifacts/dryrun_perf (PERF_PROFILES + decode constraints +
+serve weight regime) and prints per-cell bound-time ratios.
+"""
+import argparse
+import json
+from pathlib import Path
+
+
+def key(r):
+    return (r["arch"], r["shape"], r["mesh"])
+
+
+def bound(r):
+    t = r["totals"]
+    return max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"])
+
+
+def load(d):
+    out = {}
+    for p in Path(d).glob("*.json"):
+        r = json.loads(p.read_text())
+        if "totals" in r:
+            out[key(r)] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="artifacts/dryrun")
+    ap.add_argument("--opt", default="artifacts/dryrun_perf")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    base, opt = load(args.base), load(args.opt)
+    print("| arch | shape | baseline bound (s) | optimized bound (s) | "
+          "gain | bottleneck after |")
+    print("|---|---|---|---|---|---|")
+    gains = []
+    for k in sorted(base):
+        if k[2] != args.mesh or k not in opt:
+            continue
+        b, o = bound(base[k]), bound(opt[k])
+        gains.append(b / o)
+        print(f"| {k[0]} | {k[1]} | {b:.3e} | {o:.3e} | "
+              f"{b/o:5.2f}x | {opt[k]['totals']['bottleneck']} |")
+    if gains:
+        import math
+        geo = math.exp(sum(math.log(g) for g in gains) / len(gains))
+        print(f"\ngeomean gain over {len(gains)} cells: {geo:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json, prints one row per (arch, shape, mesh):
+the three roofline terms (seconds), the bottleneck, MODEL_FLOPS, the
+useful-FLOPs ratio, fits-on-v5e, and per-step bound time.
+"""
+import argparse
+import json
+from pathlib import Path
+
+
+def load(outdir="artifacts/dryrun", mesh=None, tag=None):
+    rows = []
+    for p in sorted(Path(outdir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def hbm_per_dev(r):
+    """Per-device residency: arg+out-alias (per-device) + temp/chips
+    (temp is program-wide on the host-simulated backend)."""
+    mem = r.get("full", {}).get("memory")
+    if not mem:
+        return None
+    return (mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0) / max(r.get("n_chips", 1), 1))
+
+
+def fmt_row(r):
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"SKIP ({r['skipped'].split(':')[0]}) | — | — |")
+    if "error" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — |")
+    t = r["totals"]
+    hbm = hbm_per_dev(r)
+    fits = None if hbm is None else hbm < 16 * 1024 ** 3
+    fits_s = {True: "yes", False: "NO", None: "?"}[fits]
+    ratio = r.get("useful_flops_ratio")
+    return ("| {arch} | {shape} | {mesh} | {tc:.2e} | {tm:.2e} | {tl:.2e} | "
+            "{bn} | {ratio} | {fits} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                tc=t["t_compute_s"], tm=t["t_memory_s"],
+                tl=t["t_collective_s"], bn=t["bottleneck"],
+                ratio=(f"{ratio:.2f}" if ratio else "—"), fits=fits_s))
+
+
+HEADER = ("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
+          "t_collective (s) | bottleneck | useful/HLO | fits 16G |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.out, args.mesh)
+    if args.csv:
+        for r in rows:
+            if "totals" not in r:
+                continue
+            t = r["totals"]
+            print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0,"
+                  f"bottleneck={t['bottleneck']}")
+        return
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
+  table1              Table I (three input regimes)
+  fig23               Figs 2/3 monotonicity
+  bench_head_units    unit cost vs class count k (the paper's size claim)
+  bench_kernels       fused reduced head vs unfused pipeline
+  roofline            summary of the dry-run roofline artifacts (if present)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_head_units, bench_kernels,
+                            fig23_monotonicity, table1)
+    sections = [
+        ("table1", table1.main),
+        ("fig23", fig23_monotonicity.main),
+        ("bench_head_units", bench_head_units.main),
+        ("bench_kernels", bench_kernels.main),
+    ]
+    failures = []
+    for name, fn in sections:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},0,FAILED={e!r}")
+    # roofline summary (optional: requires dry-run artifacts)
+    try:
+        from benchmarks import roofline
+        rows = roofline.load()
+        if rows:
+            print("# --- roofline (from artifacts/dryrun) ---")
+            for r in rows:
+                if "totals" not in r:
+                    continue
+                t = r["totals"]
+                tb = max(t["t_compute_s"], t["t_memory_s"],
+                         t["t_collective_s"])
+                print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0,"
+                      f"bottleneck={t['bottleneck']}_tbound={tb:.3e}s")
+    except Exception:
+        traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

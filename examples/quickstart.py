@@ -1,0 +1,49 @@
+"""Quickstart: train a tiny LM, then serve it with the Reduced Softmax unit.
+
+Runs in ~1 minute on CPU:
+  1. train a reduced qwen3-family config on the synthetic pipeline;
+  2. generate greedily with the paper's reduced head (argmax, no softmax);
+  3. verify the generation is bit-identical to the full-softmax engine.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.configs.base import ShapeSpec
+from repro.launch.train import train
+from repro.models import api
+from repro.optim.optimizer import AdamWConfig
+
+
+def main():
+    cfg = smoke_config(ARCHS["qwen3-0.6b"])
+    shape = ShapeSpec("quickstart", seq_len=64, global_batch=8, kind="train")
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.2f}M params")
+    state, losses = train(
+        cfg, shape, AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60),
+        steps=60, log_every=20)
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    params = state["params"]
+    prompt = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 12)), jnp.int32)
+    outs = {}
+    for mode in ("reduced", "softmax"):
+        tok, cache = api.serve_prefill(params, cfg, {"tokens": prompt}, 32,
+                                       head_mode=mode)
+        seq = [int(tok[0])]
+        for i in range(8):
+            tok, cache = api.serve_decode(params, cfg, tok[:, None], cache,
+                                          jnp.int32(12 + i), head_mode=mode)
+            seq.append(int(tok[0]))
+        outs[mode] = seq
+        print(f"{mode:8s} head generation: {seq}")
+    assert outs["reduced"] == outs["softmax"], "Theorem 1 violated?!"
+    print("reduced == softmax generations (Theorem 1 holds end-to-end)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Serving demo: continuous batching with the Reduced Softmax head.
+
+Shows the engine admitting a mixed queue of requests into a fixed set of
+decode slots, freeing slots on completion, and (the paper's point) that
+greedy serving never computes a softmax.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = smoke_config(ARCHS["qwen3-0.6b"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, n_slots=4, max_len=96, eos_id=1,
+                      head_mode="reduced")
+
+    rng = np.random.default_rng(0)
+    n_req = 12
+    for rid in range(n_req):
+        plen = int(rng.integers(4, 24))
+        eng.submit(Request(rid, rng.integers(0, cfg.vocab_size, plen)
+                           .astype(np.int32),
+                           max_new_tokens=int(rng.integers(4, 12))))
+    t0 = time.perf_counter()
+    stats = eng.run()
+    dt = time.perf_counter() - t0
+    print(f"served {n_req} requests in {dt:.2f}s with {eng.n_slots} slots")
+    print(f"stats: {stats}")
+    tput = stats["decode_steps"] / dt
+    print(f"engine decode steps/s: {tput:.1f} "
+          f"(head unit: argmax only — zero exp/div, Theorem 1)")
+    assert stats["completed"] == n_req
+
+
+if __name__ == "__main__":
+    main()

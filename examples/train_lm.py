@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+A real (non-smoke) dense config in the qwen3 family: 10 layers,
+d_model 640, GQA 10/2 heads, 32k vocab => ~106M params. Uses the full
+production stack: sharded init, pjit train step, synthetic pipeline,
+checkpointing, straggler monitor, preemption guard.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+(On this CPU container ~1-2 s/step at the default seq 128 x batch 4.)
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data.pipeline import DataConfig
+from repro.launch.train import train
+from repro.optim.optimizer import AdamWConfig
+
+CONFIG_100M = ModelConfig(
+    name="repro-100m", family="dense",
+    n_layers=10, d_model=640, n_heads=10, n_kv_heads=2, head_dim=64,
+    d_ff=2560, vocab_size=32064,
+    activation="silu_glu", qk_norm=True, rope_theta=10_000.0,
+    dtype="float32", remat="none",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = CONFIG_100M
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    shape = ShapeSpec("train_lm", args.seq, args.batch, "train")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                      weight_decay=0.01)
+    state, losses = train(
+        cfg, shape, opt, steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        data_cfg=DataConfig(seed=0, vocab_size=512))
+    print(f"final loss: {losses[-1]:.4f} (start {losses[0]:.4f}); "
+          f"min {min(losses):.4f}")
+    assert losses[-1] < losses[0], "did not learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Registry: ``--arch`` id -> ModelConfig (exact assigned shapes)."""
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    MoESpec,
+    ShapeSpec,
+    shape_applicable,
+    smoke_config,
+)
+from repro.configs.internvl2_26b import CONFIG as _internvl2_26b
+from repro.configs.llama4_maverick_400b import CONFIG as _llama4
+from repro.configs.nemotron_4_340b import CONFIG as _nemotron
+from repro.configs.phi35_moe import CONFIG as _phi35
+from repro.configs.qwen3_0_6b import CONFIG as _qwen3_06b
+from repro.configs.qwen3_32b import CONFIG as _qwen3_32b
+from repro.configs.recurrentgemma_2b import CONFIG as _rgemma
+from repro.configs.rwkv6_7b import CONFIG as _rwkv6
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.starcoder2_7b import CONFIG as _starcoder2
+
+ARCHS = {
+    "qwen3-32b": _qwen3_32b,
+    "nemotron-4-340b": _nemotron,
+    "starcoder2-7b": _starcoder2,
+    "qwen3-0.6b": _qwen3_06b,
+    "internvl2-26b": _internvl2_26b,
+    "llama4-maverick-400b-a17b": _llama4,
+    "phi3.5-moe-42b-a6.6b": _phi35,
+    "rwkv6-7b": _rwkv6,
+    "seamless-m4t-large-v2": _seamless,
+    "recurrentgemma-2b": _rgemma,
+}
+
+
+# Per-arch performance profiles discovered by the §Perf hillclimb
+# (EXPERIMENTS.md). Applied with get_config(arch, perf=True).
+#  - seq_parallel_attn: context-parallel attention for head counts that do
+#    not divide TP=16 (fixes GSPMD score-partial all-reduce storms);
+#  - moe_impl='ep': shard_map expert parallelism (replaces the GShard
+#    one-hot einsum dispatch).
+PERF_PROFILES = {
+    "starcoder2-7b": dict(seq_parallel_attn=True),          # 36 heads % 16
+    "llama4-maverick-400b-a17b": dict(seq_parallel_attn=True,  # 40 heads
+                                      moe_impl="ep"),
+    "internvl2-26b": dict(),      # 48 heads divide 16: baseline is clean
+    "phi3.5-moe-42b-a6.6b": dict(moe_impl="ep"),
+    "nemotron-4-340b": dict(),
+    "seamless-m4t-large-v2": dict(),
+    "qwen3-32b": dict(), "qwen3-0.6b": dict(),
+    "rwkv6-7b": dict(), "recurrentgemma-2b": dict(),
+}
+
+
+def get_config(arch: str, perf: bool = False) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    cfg = ARCHS[arch]
+    if perf and PERF_PROFILES.get(arch):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **PERF_PROFILES[arch])
+    return cfg

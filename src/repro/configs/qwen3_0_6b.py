@@ -1,0 +1,12 @@
+"""qwen3-0.6b [dense]: 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936. qk_norm + GQA, tied embeddings. [hf]
+head_dim=128 (Qwen3 head size; q-width 2048)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=3072, vocab_size=151936,
+    activation="silu_glu", qk_norm=True, rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)

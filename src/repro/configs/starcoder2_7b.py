@@ -1,0 +1,11 @@
+"""starcoder2-7b [dense]: 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152. GQA + RoPE, non-gated GeLU MLP. [arXiv:2402.19173; hf]
+head_dim=128 (= 4608/36). Full attention per assignment line."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4, head_dim=128,
+    d_ff=18432, vocab_size=49152,
+    activation="gelu", rope_theta=100_000.0,
+)

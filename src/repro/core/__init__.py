@@ -1,0 +1,24 @@
+"""Core: the paper's reduced softmax unit + hardware-softmax baselines."""
+from repro.core.reduced_softmax import (
+    argmax_with_value,
+    distributed_argmax,
+    fused_reduced_head,
+    reduced_softmax_predict,
+    sharded_reduced_head,
+    unit_op_counts,
+)
+from repro.core.softmax_variants import (
+    PREDICT_FNS,
+    base2_exp,
+    base2_softmax_unit,
+    cordic_exp,
+    inverse_softmax_unit,
+    log_softmax_unit,
+    predict_base2_softmax,
+    predict_inverse_softmax,
+    predict_log_softmax,
+    predict_pseudo_softmax,
+    predict_softmax,
+    pseudo_softmax_unit,
+    softmax_unit,
+)

@@ -1,0 +1,202 @@
+"""The paper's contribution: the Reduced Softmax unit.
+
+Theorem 1 (monotonicity of exp, hence of softmax) implies that for
+inference-only accelerators the softmax activation can be replaced by a
+comparator: ``predict(x) = argmax(x)`` with NO exponentials, sum, or
+division, and the classification result is identical.
+
+This module provides that unit at three integration levels:
+
+1. ``reduced_softmax_predict``    the pure algorithmic form (argmax).
+2. ``fused_reduced_head``         TPU adaptation: argmax over ``h @ W`` without
+                                  materializing the logits (Pallas kernel or an
+                                  XLA reference path); see DESIGN.md §2.
+3. ``distributed_argmax`` /       multi-chip form for a vocab-sharded head:
+   ``sharded_reduced_head``       per-shard (max, argmax), one tiny (val, idx)
+                                  combine across the ``model`` mesh axis.
+
+Tie semantics everywhere: lowest index wins (matches ``jnp.argmax``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# 1. The reduced unit itself (paper, Fig. 4)
+# ---------------------------------------------------------------------------
+def reduced_softmax_predict(x: jax.Array, axis: int = -1) -> jax.Array:
+    """The comparator unit: class = argmax of the raw inputs.
+
+    By Theorem 1 this equals ``argmax(softmax(x))`` exactly.
+    """
+    return jnp.argmax(x, axis=axis)
+
+
+def argmax_with_value(x: jax.Array, axis: int = -1):
+    """(argmax, max) pair — the comparator's full output bus."""
+    idx = jnp.argmax(x, axis=axis)
+    val = jnp.max(x, axis=axis)
+    return idx, val
+
+
+# ---------------------------------------------------------------------------
+# 2. Fused head: argmax(h @ W) without materializing logits
+# ---------------------------------------------------------------------------
+def fused_reduced_head(
+    h: jax.Array,
+    w: jax.Array,
+    *,
+    use_pallas: bool = False,
+    block_v: int = 512,
+    block_k: int = 512,
+    block_b: int = 128,
+) -> jax.Array:
+    """argmax over the vocab of ``h @ w`` for greedy decoding.
+
+    Args:
+      h: activations ``(B, D)``.
+      w: head weight ``(D, V)`` (i.e. embedding transposed for tied heads).
+      use_pallas: route through the Pallas VMEM-tiled kernel (TPU target;
+        validated on CPU with interpret mode). When False, an XLA path is
+        used — XLA already fuses matmul+reduce well, but still materializes
+        (B, V) through HBM on real hardware; the Pallas kernel does not.
+
+    Returns:
+      ``(B,)`` int32 predicted classes.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.fused_argmax_head(
+            h, w, block_v=block_v, block_k=block_k, block_b=block_b
+        )
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 3. Distributed (vocab-sharded) reduced unit
+# ---------------------------------------------------------------------------
+def _combine_val_idx(val: jax.Array, idx: jax.Array, axis: int = -1):
+    """Argmax over a (val, idx) table along ``axis``, lowest-index-wins.
+
+    Given per-shard maxima ``val[..., s]`` and their GLOBAL indices
+    ``idx[..., s]``, pick the winning shard. Ties between shards resolve to
+    the shard holding the smaller global index, matching jnp.argmax on the
+    unsharded array.
+    """
+    best = jnp.max(val, axis=axis, keepdims=True)
+    is_best = val == best
+    # Among ties, the smallest global index.
+    cand = jnp.where(is_best, idx, jnp.iinfo(jnp.int32).max)
+    return jnp.min(cand, axis=axis), jnp.max(val, axis=axis)
+
+
+def distributed_argmax(
+    logits: jax.Array,
+    mesh: jax.sharding.Mesh,
+    shard_axis: str = "model",
+    *,
+    batch_axes: tuple = (),
+) -> jax.Array:
+    """argmax over the last (vocab) axis of logits sharded on ``shard_axis``.
+
+    The full-softmax unit on a sharded head needs a max all-reduce AND a sum
+    all-reduce of normalizers; a sampling head additionally gathers logits.
+    The reduced unit needs a single all-gather of one (val, idx) pair per row
+    per shard — O(rows * n_shards * 8 bytes) on the wire.
+
+    ``batch_axes`` optionally maps leading logit axes to mesh axes (e.g.
+    ``('data',)`` when the batch is data-sharded).
+    """
+    n_batch = logits.ndim - 1
+    in_spec = P(*batch_axes, *([None] * (n_batch - len(batch_axes))), shard_axis)
+    out_spec = P(*batch_axes, *([None] * (n_batch - len(batch_axes))))
+
+    def local_fn(x):
+        shard_id = jax.lax.axis_index(shard_axis)
+        v_local = x.shape[-1]
+        local_idx = jnp.argmax(x, axis=-1).astype(jnp.int32)
+        local_val = jnp.max(x, axis=-1)
+        global_idx = local_idx + shard_id * v_local
+        # (rows..., n_shards) tables — tiny.
+        vals = jax.lax.all_gather(local_val, shard_axis, axis=-1, tiled=False)
+        idxs = jax.lax.all_gather(global_idx, shard_axis, axis=-1, tiled=False)
+        winner, _ = _combine_val_idx(vals, idxs, axis=-1)
+        return winner
+
+    return jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
+        check_vma=False,
+    )(logits)
+
+
+def sharded_reduced_head(
+    h: jax.Array,
+    w: jax.Array,
+    mesh: jax.sharding.Mesh,
+    *,
+    shard_axis: str = "model",
+    data_axes: tuple = ("data",),
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Full distributed reduced head: per-shard fused argmax + tiny combine.
+
+    h: (B, D) sharded ``P(data_axes, None)``; w: (D, V) sharded
+    ``P(None, shard_axis)``. Returns (B,) int32, sharded ``P(data_axes)``.
+
+    Inside each shard the fused kernel never materializes its (B, V/shards)
+    logits slice; across shards only (val, idx) pairs move.
+    """
+    in_specs = (P(*data_axes, None), P(None, shard_axis))
+    out_spec = P(*data_axes)
+
+    def local_fn(h_l, w_l):
+        shard_id = jax.lax.axis_index(shard_axis)
+        v_local = w_l.shape[-1]
+        logits = jnp.dot(h_l, w_l, preferred_element_type=jnp.float32)
+        if use_pallas:
+            from repro.kernels import ops as kernel_ops
+
+            local_idx, local_val = kernel_ops.fused_argmax_head_with_value(h_l, w_l)
+        else:
+            local_idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            local_val = jnp.max(logits, axis=-1)
+        global_idx = local_idx + shard_id * v_local
+        vals = jax.lax.all_gather(local_val, shard_axis, axis=-1, tiled=False)
+        idxs = jax.lax.all_gather(global_idx, shard_axis, axis=-1, tiled=False)
+        winner, _ = _combine_val_idx(vals, idxs, axis=-1)
+        return winner
+
+    return jax.shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
+        check_vma=False,
+    )(h, w)
+
+
+# ---------------------------------------------------------------------------
+# Head-unit registry: how many ops each unit spends per k-class decision.
+# Used by benchmarks/bench_head_units.py for the paper's cost claim.
+# ---------------------------------------------------------------------------
+def unit_op_counts(k: int, precision_bits: int = 8, cordic_iters: int = 24):
+    """Arithmetic-op inventory of each softmax unit for one k-class decision.
+
+    Mirrors the paper's circuit-size argument in op counts (the TPU analogue
+    of gate count): exp/LUT lookups, adds, multiplies/divides, compares.
+    """
+    return {
+        "softmax": dict(exp=k, add=k - 1, div=k, cmp=k - 1, lut=0),
+        "log_softmax": dict(exp=k, add=2 * k - 1, div=0, cmp=2 * (k - 1), lut=0),
+        "base2_softmax": dict(exp=0, add=2 * k - 1, div=k, cmp=k - 1, lut=k,
+                              shift=k),
+        "pseudo_softmax": dict(exp=0, add=k - 1, div=k, cmp=k - 1, lut=k),
+        "inverse_softmax": dict(exp=k, add=k, div=0, cmp=k - 1,
+                                cordic_iters=cordic_iters * k),
+        "reduced (ours)": dict(exp=0, add=0, div=0, cmp=k - 1, lut=0),
+    }

@@ -1,0 +1,198 @@
+"""Hardware softmax-unit baselines the paper compares against.
+
+Each "unit" mirrors a published hardware softmax implementation at the
+algorithm level, so the benchmark suite can compare (a) classification
+agreement with the exact softmax and (b) arithmetic cost, against the
+paper's reduced (argmax-only) unit.
+
+Implemented units
+-----------------
+- ``softmax_unit``            exact, numerically-stable softmax (the reference).
+- ``log_softmax_unit``        Kouretas & Paliouras [2]: work in the log domain;
+                              the max is subtracted so every exponential input
+                              is <= 0 and exp(.) <= 1 (their shrunken-LUT trick).
+- ``base2_softmax_unit``      Zhu et al. [3]: e^x = 2^(x*log2 e); integer part
+                              of the exponent is a shift, fractional part is a
+                              P-bit LUT. We simulate the LUT faithfully with a
+                              2^P-entry table + nearest-index quantization.
+- ``pseudo_softmax_unit``     Cardarilli et al. [4]: replace base e by base 2
+                              outright: 2^x / sum 2^x. NOT equal to softmax, but
+                              order-preserving (2^x monotone), so argmax agrees.
+- ``inverse_softmax_unit``    Kagalkar & Raghuram [5], eq. (3):
+                              s'(x_j) = 1 + sum_{i != j} e^{x_i - x_j}
+                              = 1 / s(x_j).  Predicted class = argmin s'.
+                              Avoids the divider in hardware.
+- ``cordic_exp``              hyperbolic-rotation CORDIC evaluation of e^x
+                              (fixed iteration count), used by [5].
+
+All are pure JAX and jit-safe. Shapes: ``x`` is ``(..., k)`` with the class
+axis last.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LOG2E = 1.4426950408889634  # log2(e)
+
+
+# ---------------------------------------------------------------------------
+# Exact reference
+# ---------------------------------------------------------------------------
+def softmax_unit(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable exact softmax (eq. (1) of the paper)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - jax.lax.stop_gradient(m))
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def predict_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Classification through the full softmax unit: argmax of s(x)."""
+    return jnp.argmax(softmax_unit(x, axis=axis), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# [2] Kouretas & Paliouras: log-domain simplification
+# ---------------------------------------------------------------------------
+def log_softmax_unit(x: jax.Array, axis: int = -1) -> jax.Array:
+    """log s(x) with the max-shift so every exp() input is <= 0.
+
+    The hardware point of [2] is that after the shift, exp() maps into
+    (0, 1] so the LUT domain is bounded.  The classification decision is
+    argmax of the log-probabilities (log is monotone, Section II).
+    """
+    m = jnp.max(x, axis=axis, keepdims=True)
+    z = x - m  # z <= 0, exp(z) <= 1: the bounded-LUT property
+    return z - jnp.log(jnp.sum(jnp.exp(z), axis=axis, keepdims=True))
+
+
+def predict_log_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jnp.argmax(log_softmax_unit(x, axis=axis), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# [3] Zhu et al.: base-2, precision-adjustable (P-bit fractional LUT)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("precision_bits",))
+def base2_exp(x: jax.Array, precision_bits: int = 8) -> jax.Array:
+    """e^x approximated as 2^(x*log2e) with int shift + P-bit fractional LUT.
+
+    y = x*log2(e); y = n + v with n integer, v in [0, 1).
+    2^n is exact (a shift in hardware); 2^v is read from a 2^P-entry LUT
+    indexed by the top P bits of v (nearest-entry quantization).
+    """
+    y = x * LOG2E
+    n = jnp.floor(y)
+    v = y - n  # in [0, 1)
+    size = 1 << precision_bits
+    # The LUT a real unit would hold in ROM: 2^(i/size) for i in [0, size).
+    lut = jnp.exp2(jnp.arange(size, dtype=jnp.float32) / size)
+    idx = jnp.clip(jnp.round(v * size).astype(jnp.int32), 0, size - 1)
+    frac = lut[idx]
+    return jnp.exp2(n) * frac
+
+
+@functools.partial(jax.jit, static_argnames=("precision_bits", "axis"))
+def base2_softmax_unit(
+    x: jax.Array, precision_bits: int = 8, axis: int = -1
+) -> jax.Array:
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = base2_exp(x - m, precision_bits=precision_bits)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def predict_base2_softmax(
+    x: jax.Array, precision_bits: int = 8, axis: int = -1
+) -> jax.Array:
+    return jnp.argmax(
+        base2_softmax_unit(x, precision_bits=precision_bits, axis=axis), axis=axis
+    )
+
+
+# ---------------------------------------------------------------------------
+# [4] Cardarilli et al.: pseudo-softmax (base 2 outright)
+# ---------------------------------------------------------------------------
+def pseudo_softmax_unit(x: jax.Array, axis: int = -1) -> jax.Array:
+    """2^x / sum 2^x — not equal to softmax but order-preserving."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp2(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def predict_pseudo_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jnp.argmax(pseudo_softmax_unit(x, axis=axis), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# [5] Kagalkar & Raghuram: CORDIC exp + inverse softmax
+# ---------------------------------------------------------------------------
+def cordic_exp(x: jax.Array, iterations: int = 24) -> jax.Array:
+    """e^x via hyperbolic CORDIC (rotation mode), fixed iteration count.
+
+    Classic scheme: e^x = cosh x + sinh x, computed with hyperbolic
+    micro-rotations z -> z -/+ atanh(2^-i); iterations i = 4, 13, 40...
+    are repeated for convergence.  Convergence domain |x| <~ 1.118, so the
+    argument is range-reduced: x = q*ln2 + r, e^x = 2^q * e^r.
+    """
+    ln2 = 0.6931471805599453
+    q = jnp.round(x / ln2)
+    r = x - q * ln2  # |r| <= ln2/2 ~ 0.347, inside the CORDIC domain
+
+    # Iteration schedule with the standard repeats at i=4 and i=13.
+    sched = []
+    i = 1
+    while len(sched) < iterations:
+        sched.append(i)
+        if i in (4, 13):  # repeat for hyperbolic convergence
+            sched.append(i)
+        i += 1
+    sched = sched[:iterations]
+
+    # Gain K = prod sqrt(1 - 2^-2i) over the schedule; start at x0=y0=1/K
+    # so the final cosh+sinh needs no multiply.
+    k = 1.0
+    for i in sched:
+        k *= (1.0 - 2.0 ** (-2 * i)) ** 0.5
+    cx = jnp.full_like(r, 1.0 / k)
+    cy = jnp.zeros_like(r)
+    cz = r
+    for i in sched:
+        t = 2.0 ** (-i)
+        alpha = float(jnp.arctanh(t))
+        d = jnp.where(cz >= 0, 1.0, -1.0)
+        cx, cy, cz = cx + d * t * cy, cy + d * t * cx, cz - d * alpha
+    er = cx + cy  # cosh r + sinh r
+    return jnp.exp2(q) * er
+
+
+def inverse_softmax_unit(
+    x: jax.Array, axis: int = -1, exp_fn=jnp.exp
+) -> jax.Array:
+    """Eq. (3) of the paper: s'(x_j) = 1 + sum_{i != j} e^{x_i - x_j}.
+
+    The reciprocal of softmax — no divider needed; predicted class is the
+    ARGMIN of s'.  exp_fn is pluggable so the CORDIC exp of [5] can be used.
+    """
+    # sum_i e^{x_i - x_j} = (sum_i e^{x_i - m}) * e^{m - x_j}
+    m = jnp.max(x, axis=axis, keepdims=True)
+    tot = jnp.sum(exp_fn(x - m), axis=axis, keepdims=True)
+    # s'(x_j) = tot * e^{m - x_j}  (the j term contributes the "1 +")
+    return tot * exp_fn(m - x)
+
+
+def predict_inverse_softmax(x: jax.Array, axis: int = -1, exp_fn=jnp.exp) -> jax.Array:
+    return jnp.argmin(inverse_softmax_unit(x, axis=axis, exp_fn=exp_fn), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Registry used by benchmarks/tests
+# ---------------------------------------------------------------------------
+PREDICT_FNS = {
+    "softmax": predict_softmax,
+    "log_softmax": predict_log_softmax,
+    "base2_softmax": predict_base2_softmax,
+    "pseudo_softmax": predict_pseudo_softmax,
+    "inverse_softmax": predict_inverse_softmax,
+}

@@ -1,0 +1,139 @@
+"""Deterministic, sharded, resumable synthetic data pipeline.
+
+Design constraints of a 1000-node system:
+  - STATELESS indexing: batch(step) is a pure function of (seed, step), so
+    restart-from-checkpoint needs no data-state restore and every host can
+    generate exactly its own shard (disjointness by construction).
+  - Per-host sharding: each host materializes only its slice of the global
+    batch and assembles a global jax.Array via make_array_from_callback.
+  - Two sources: 'synthetic' (hash-based token stream with enough local
+    structure that a model can overfit it — loss decreases in examples),
+    and 'memmap' (tokenized .bin corpus, memory-mapped, strided access).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    kind: str = "synthetic"           # 'synthetic' | 'memmap'
+    path: Optional[str] = None        # for memmap: token .bin (uint16/32)
+    vocab_size: int = 256
+
+
+def _hash_tokens(seed: int, step: int, rows: np.ndarray, seq: int,
+                 vocab: int) -> np.ndarray:
+    """Deterministic pseudo-corpus with GENUINELY learnable structure.
+
+    A first-order Markov process: with prob. 7/8 the next token is the
+    deterministic successor ``(31*prev + 7) % vocab``; with prob. 1/8 it
+    resets to a fresh pseudo-random token. Per-token entropy is
+    ~(ln vocab)/8 + H(1/8) nats — far below the uniform ln(vocab) — so a
+    model that learns the successor map shows a clear loss drop (the
+    original pure-hash stream was incompressible: eval loss pinned at
+    ln(vocab)). Fully stateless in (seed, step, row): host-shard
+    disjointness and restart determinism hold by construction.
+    """
+    # per-row starting state, stable across processes by row id
+    # (uint64 wraparound is intentional: it's a hash)
+    with np.errstate(over="ignore"):
+        state = (rows.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+                 + np.uint64(step + 1) * np.uint64(0xBF58476D1CE4E5B9)
+                 + np.uint64(seed) * np.uint64(0x94D049BB133111EB))
+        toks = np.empty((len(rows), seq), np.int64)
+        prev = np.zeros(len(rows), np.int64)
+        for t in range(seq):
+            state = state * np.uint64(6364136223846793005) \
+                + np.uint64(1442695040888963407)
+            rnd = state >> np.uint64(33)
+            succ = (31 * prev + 7) % vocab
+            fresh = (rnd % np.uint64(vocab)).astype(np.int64)
+            use_succ = ((rnd >> np.uint64(24)) % np.uint64(8)) != 0
+            prev = np.where(use_succ & (t > 0), succ, fresh)
+            toks[:, t] = prev
+    return toks
+
+
+class TokenPipeline:
+    """Yields global batches as sharded jax.Arrays, indexed by step."""
+
+    def __init__(self, data_cfg: DataConfig, model_cfg: ModelConfig,
+                 shape: ShapeSpec, mesh, batch_sharding):
+        self.dc = data_cfg
+        self.mc = model_cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.sharding = batch_sharding  # NamedSharding for (B, S) arrays
+        self._mm = None
+        if data_cfg.kind == "memmap":
+            assert data_cfg.path, "memmap source needs a path"
+            raw = np.memmap(data_cfg.path, dtype=np.uint16, mode="r")
+            self._mm = raw
+
+    def _host_rows(self, step: int, rows: np.ndarray) -> np.ndarray:
+        B, S = self.shape.global_batch, self.shape.seq_len
+        vocab = min(self.dc.vocab_size, self.mc.vocab_size)
+        if self._mm is not None:
+            n = len(self._mm) - (S + 1)
+            out = np.empty((len(rows), S + 1), np.int64)
+            for i, r in enumerate(rows):
+                off = (step * B + int(r)) * 13 % n
+                out[i] = self._mm[off:off + S + 1].astype(np.int64)
+            return out % self.mc.vocab_size
+        return _hash_tokens(self.dc.seed, step, rows, S + 1, vocab)
+
+    def batch(self, step: int) -> dict:
+        """Global batch for ``step``: {'tokens','labels'} (+ stub frontends)."""
+        B, S = self.shape.global_batch, self.shape.seq_len
+        full = None  # lazily generated per-shard
+
+        def cb(idx):
+            rows = np.arange(B)[idx[0]]
+            data = self._host_rows(step, rows)
+            return data
+
+        tokens_p1 = jax.make_array_from_callback(
+            (B, S + 1), self._spec2d_p1(), cb)
+        tokens = tokens_p1[:, :-1].astype("int32")
+        labels = tokens_p1[:, 1:].astype("int32")
+        out = {"tokens": tokens, "labels": labels}
+        if self.mc.n_encoder_layers:
+            out["src_embeds"] = self._stub_embeds(step, (B, S))
+        if self.mc.num_image_tokens:
+            out["image_embeds"] = self._stub_embeds(
+                step, (B, self.mc.num_image_tokens))
+        return out
+
+    def _spec2d_p1(self):
+        from jax.sharding import NamedSharding
+        sp = self.sharding.spec
+        return NamedSharding(self.mesh, sp)
+
+    def _stub_embeds(self, step: int, bs):
+        """Deterministic frontend stub embeddings (B, N, D)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        B, N = bs
+        D = self.mc.d_model
+        sp = self.sharding.spec
+        sh = NamedSharding(self.mesh, P(sp[0], None, None))
+
+        def cb(idx):
+            rows = np.arange(B)[idx[0]]
+            rng = np.random.Generator(np.random.Philox(
+                key=np.uint64(self.dc.seed + 7),
+                counter=[0, 0, np.uint64(step), np.uint64(int(rows[0]))]))
+            return rng.standard_normal((len(rows), N, D),
+                                       dtype=np.float32) * 0.02
+
+        import jax.numpy as jnp
+        arr = jax.make_array_from_callback((B, N, D), sh, cb)
+        return arr.astype(jnp.dtype(self.mc.dtype))

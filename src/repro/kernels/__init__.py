@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots of the reduced-softmax system.
+
+ - fused_argmax_head : the paper's reduced unit fused with the LM-head matmul
+ - online_softmax    : the full softmax unit (flash-style, baseline)
+ - fused_xent        : training-head softmax-CE without materialized probs
+ - flash_attention   : online-softmax attention tiling (the §Roofline
+                       memory-bound rows' lever; GQA-native, causal+window)
+
+Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash attention (online-softmax tiling).
+
+The §Roofline table shows every dense train/prefill cell memory-bound,
+dominated by materialized (B, H, T, S) score tensors. This kernel keeps
+score tiles in VMEM with the online-softmax carry (the same (m, l)
+recurrence as kernels/online_softmax.py) so scores never reach HBM —
+the standard TPU flash pattern, with causal and sliding-window masks
+and native GQA (no KV head repeat: the K/V block index maps divide the
+query-head index by the group size).
+
+Shapes: q (B, Hq, T, hd); k, v (B, Hkv, S, hd) -> out (B, Hq, T, hd).
+
+Forward-only (inference/prefill; training would add the dO recurrence).
+Validated in interpret mode against ref.flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window, t_true: int, s_true: int,
+            block_t: int, block_s: int, ns: int):
+    it = pl.program_id(2)
+    js = pl.program_id(3)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # (Tt, hd)
+    k = k_ref[0, 0].astype(jnp.float32)      # (St, hd)
+    v = v_ref[0, 0].astype(jnp.float32)      # (St, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_idx = it * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_idx = js * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (q_idx < t_true) & (k_idx < s_true)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)          # (Tt, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # rows with no valid key yet keep m = -inf; guard exp(-inf - -inf)
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(jnp.where(mask, s - safe_m, _NEG_INF))
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_t", "block_s", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_t: int = 128, block_s: int = 128,
+                    interpret: bool = False):
+    """q: (B, Hq, T, hd); k, v: (B, Hkv, S, hd). GQA when Hq > Hkv."""
+    b, hq, t_true, hd = q.shape
+    _, hkv, s_true, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    tt = min(block_t, max(8, -(-t_true // 8) * 8))
+    ts = min(block_s, max(128, -(-s_true // 128) * 128))
+    pad_t, pad_s = -t_true % tt, -s_true % ts
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    t, s = t_true + pad_t, s_true + pad_s
+    nt, ns = t // tt, s // ts
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        t_true=t_true, s_true=s_true, block_t=tt, block_s=ts, ns=ns)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hq, nt, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, tt, hd),
+                         lambda bi, hi, ti, si: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, ts, hd),
+                         lambda bi, hi, ti, si, _g=g: (bi, hi // _g, si, 0)),
+            pl.BlockSpec((1, 1, ts, hd),
+                         lambda bi, hi, ti, si, _g=g: (bi, hi // _g, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tt, hd),
+                               lambda bi, hi, ti, si: (bi, hi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tt, 1), jnp.float32),
+            pltpu.VMEM((tt, 1), jnp.float32),
+            pltpu.VMEM((tt, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :t_true, :]

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: the fused Reduced-Softmax LM head.
+
+Computes ``argmax_v(h @ w)`` (and the max value) for greedy decoding
+WITHOUT materializing the ``(B, V)`` logits in HBM — the TPU-native form of
+the paper's comparator unit (DESIGN.md §2).
+
+Tiling (all VMEM-resident, MXU-aligned):
+
+    grid = (nb, nv, nk)          # k innermost: accumulate h@w in f32 scratch
+    h block   (Bt, Kt)           # indexed (b, k)
+    w block   (Kt, Vt)           # indexed (k, v)
+    acc       (Bt, Vt) f32       # scratch, rebuilt per (b, v)
+    run_max   (Bt, 1)  f32       # scratch, persists across v for fixed b
+    run_idx   (Bt, 1)  i32
+    outputs   idx (B, 1) i32, val (B, 1) f32   # written at v == nv-1
+
+The running (max, idx) update uses a strictly-greater compare so the first
+(lowest-index) maximum wins, matching ``jnp.argmax`` tie semantics.  Vocab
+padding (when V % Vt != 0) is masked with -inf inside the kernel using the
+static true V, so padded columns can never win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(h_ref, w_ref, idx_ref, val_ref, acc_ref, m_ref, i_ref, *,
+            v_true: int, block_v: int, nv: int, nk: int):
+    v = pl.program_id(1)
+    k = pl.program_id(2)
+
+    # Fresh accumulator for each (b, v) tile; fresh running stats per b row.
+    @pl.when(jnp.logical_and(v == 0, k == 0))
+    def _init_running():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        i_ref[...] = jnp.zeros_like(i_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        h_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _reduce_tile():
+        tile = acc_ref[...]  # (Bt, Vt) f32
+        # Mask vocab padding: global column id of each lane in this tile.
+        col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+        tile = jnp.where(col < v_true, tile, _NEG_INF)
+        tile_max = jnp.max(tile, axis=-1, keepdims=True)              # (Bt, 1)
+        tile_arg = jnp.argmax(tile, axis=-1, keepdims=True)           # (Bt, 1)
+        tile_idx = (tile_arg + v * block_v).astype(jnp.int32)
+        better = tile_max > m_ref[...]  # strict: earlier tile wins ties
+        m_ref[...] = jnp.where(better, tile_max, m_ref[...])
+        i_ref[...] = jnp.where(better, tile_idx, i_ref[...])
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            idx_ref[...] = i_ref[...]
+            val_ref[...] = m_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_v", "block_k", "interpret")
+)
+def fused_argmax_head_with_value(
+    h: jax.Array,
+    w: jax.Array,
+    *,
+    block_b: int = 128,
+    block_v: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """(idx, val) of argmax_v(h @ w). h: (B, D); w: (D, V)."""
+    b_true, d = h.shape
+    d_w, v_true = w.shape
+    assert d == d_w, (h.shape, w.shape)
+
+    bt = min(block_b, max(8, -(-b_true // 8) * 8))
+    vt = min(block_v, max(128, -(-v_true // 128) * 128))
+    kt = min(block_k, max(128, -(-d // 128) * 128))
+
+    pad_b = -b_true % bt
+    pad_v = -v_true % vt
+    pad_k = -d % kt
+    if pad_b or pad_k:
+        h = jnp.pad(h, ((0, pad_b), (0, pad_k)))
+    if pad_k or pad_v:
+        w = jnp.pad(w, ((0, pad_k), (0, pad_v)))
+    b, v = b_true + pad_b, v_true + pad_v
+    nb, nv, nk = b // bt, v // vt, (d + pad_k) // kt
+
+    kern = functools.partial(
+        _kernel, v_true=v_true, block_v=vt, nv=nv, nk=nk
+    )
+    idx, val = pl.pallas_call(
+        kern,
+        grid=(nb, nv, nk),
+        in_specs=[
+            pl.BlockSpec((bt, kt), lambda bi, vi, ki: (bi, ki)),
+            pl.BlockSpec((kt, vt), lambda bi, vi, ki: (ki, vi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, 1), lambda bi, vi, ki: (bi, 0)),
+            pl.BlockSpec((bt, 1), lambda bi, vi, ki: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, vt), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(h, w)
+    return idx[:b_true, 0], val[:b_true, 0]
+
+
+def fused_argmax_head(h, w, **kw):
+    """argmax_v(h @ w) -> (B,) int32, logits never materialized in HBM."""
+    return fused_argmax_head_with_value(h, w, **kw)[0]

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused softmax cross-entropy (training head).
+
+Training genuinely needs the softmax (the paper, §III: the probabilities
+feed the loss), so the train-side counterpart of the reduced unit is a
+softmax-CE that never materializes the (B, V) probabilities: one online
+pass accumulates (m, l) and picks out the label logit; the loss is
+``log l + m - logits[label]``.
+
+The backward pass (custom_vjp in ops.py) recomputes softmax blockwise from
+the saved logits instead of storing probabilities as residuals.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _xent_kernel(x_ref, lab_ref, loss_ref, m_ref, l_ref, g_ref, *,
+                 v_true: int, block_v: int, nv: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (Bt, Vt)
+    col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(col < v_true, x, _NEG_INF)
+
+    # Online logsumexp carry.
+    tile_max = jnp.max(x, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_ref[...], tile_max)
+    l_ref[...] = l_ref[...] * jnp.exp(m_ref[...] - m_new) + jnp.sum(
+        jnp.exp(x - m_new), axis=-1, keepdims=True
+    )
+    m_ref[...] = m_new
+
+    # Gather the label logit if it lives in this tile.
+    lab = lab_ref[...]  # (Bt, 1) int32, global class ids
+    hit = (lab == col)  # (Bt, Vt) one-hot within the tile (or all-false)
+    g_ref[...] += jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True)
+
+    @pl.when(v == nv - 1)
+    def _emit():
+        loss_ref[...] = m_ref[...] + jnp.log(l_ref[...]) - g_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_v", "interpret")
+)
+def fused_xent(
+    logits: jax.Array, labels: jax.Array, *,
+    block_b: int = 256, block_v: int = 512, interpret: bool = False,
+):
+    """Per-row CE loss without materializing probs. (B, V), (B,) -> (B,)."""
+    b_true, v_true = logits.shape
+    bt = min(block_b, max(8, -(-b_true // 8) * 8))
+    vt = min(block_v, max(128, -(-v_true // 128) * 128))
+    pad_b, pad_v = -b_true % bt, -v_true % vt
+    xp = jnp.pad(logits, ((0, pad_b), (0, pad_v)))
+    # Padded rows get label 0 — harmless, sliced off below.
+    lp = jnp.pad(labels.astype(jnp.int32), ((0, pad_b),))[:, None]
+    b, v = xp.shape
+    nb, nv = b // bt, v // vt
+
+    kern = functools.partial(_xent_kernel, v_true=v_true, block_v=vt, nv=nv)
+    loss = pl.pallas_call(
+        kern,
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((bt, vt), lambda bi, vi: (bi, vi)),
+            pl.BlockSpec((bt, 1), lambda bi, vi: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda bi, vi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, lp)
+    return loss[:b_true, 0]

@@ -1,0 +1,133 @@
+"""Pallas TPU kernels: the FULL softmax unit (the paper's baseline).
+
+Two-phase, flash-style online softmax over the class axis:
+
+  phase 1  ``softmax_stats``      one pass over V tiles keeping the online
+                                  carry (m, l) = (running max, running
+                                  sum exp(x - m)) in VMEM — never stores probs.
+  phase 2  ``softmax_normalize``  blockwise exp(x - m) / l.
+
+``online_softmax(x)`` composes both.  This is what a hardware softmax unit
+must spend (exp + sum + divide over all k classes) and is the comparison
+point for the reduced unit, which needs only phase-1's max lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _stats_kernel(x_ref, m_out, l_out, m_ref, l_ref, *,
+                  v_true: int, block_v: int, nv: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(col < v_true, x, _NEG_INF)
+
+    tile_max = jnp.max(x, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_ref[...], tile_max)
+    # exp(-inf - -inf) guard: rows can't be all -inf since v_true >= 1.
+    l_ref[...] = l_ref[...] * jnp.exp(m_ref[...] - m_new) + jnp.sum(
+        jnp.exp(x - m_new), axis=-1, keepdims=True
+    )
+    m_ref[...] = m_new
+
+    @pl.when(v == nv - 1)
+    def _emit():
+        m_out[...] = m_ref[...]
+        l_out[...] = l_ref[...]
+
+
+def _normalize_kernel(x_ref, m_ref, l_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.exp(x - m_ref[...]) / l_ref[...]
+
+
+def _pad_to(x, bt, vt):
+    b, v = x.shape
+    pad_b, pad_v = -b % bt, -v % vt
+    if pad_b or pad_v:
+        x = jnp.pad(x, ((0, pad_b), (0, pad_v)))
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_v", "interpret")
+)
+def softmax_stats(
+    x: jax.Array, *, block_b: int = 256, block_v: int = 512,
+    interpret: bool = False,
+):
+    """Per-row (max, sum exp(x - max)) via one online pass. x: (B, V)."""
+    b_true, v_true = x.shape
+    bt = min(block_b, max(8, -(-b_true // 8) * 8))
+    vt = min(block_v, max(128, -(-v_true // 128) * 128))
+    xp = _pad_to(x, bt, vt)
+    b, v = xp.shape
+    nb, nv = b // bt, v // vt
+
+    kern = functools.partial(_stats_kernel, v_true=v_true, block_v=vt, nv=nv)
+    m, l = pl.pallas_call(
+        kern,
+        grid=(nb, nv),
+        in_specs=[pl.BlockSpec((bt, vt), lambda bi, vi: (bi, vi))],
+        out_specs=[
+            pl.BlockSpec((bt, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((bt, 1), lambda bi, vi: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp)
+    return m[:b_true, 0], l[:b_true, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_v", "interpret")
+)
+def online_softmax(
+    x: jax.Array, *, block_b: int = 256, block_v: int = 512,
+    interpret: bool = False,
+):
+    """Stable softmax over the last axis, (B, V) -> (B, V) f32."""
+    b_true, v_true = x.shape
+    m, l = softmax_stats(x, block_b=block_b, block_v=block_v,
+                         interpret=interpret)
+    bt = min(block_b, max(8, -(-b_true // 8) * 8))
+    vt = min(block_v, max(128, -(-v_true // 128) * 128))
+    xp = _pad_to(x, bt, vt)
+    b, v = xp.shape
+    mp = jnp.pad(m[:, None], ((0, b - b_true), (0, 0)), constant_values=0.0)
+    lp = jnp.pad(l[:, None], ((0, b - b_true), (0, 0)), constant_values=1.0)
+
+    out = pl.pallas_call(
+        _normalize_kernel,
+        grid=(b // bt, v // vt),
+        in_specs=[
+            pl.BlockSpec((bt, vt), lambda bi, vi: (bi, vi)),
+            pl.BlockSpec((bt, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((bt, 1), lambda bi, vi: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, vt), lambda bi, vi: (bi, vi)),
+        out_shape=jax.ShapeDtypeStruct((b, v), jnp.float32),
+        interpret=interpret,
+    )(xp, mp, lp)
+    return out[:b_true, :v_true]

@@ -1,0 +1,84 @@
+"""Public, jit'd entry points for the kernels package.
+
+Every op takes ``use_pallas``/``interpret`` switches:
+
+  - ``use_pallas=False``  -> the pure-jnp oracle (ref.py). This is what the
+    dry-run lowers, so roofline numbers are XLA's, not the interpreter's.
+  - ``use_pallas=True, interpret=True``  -> Pallas interpret mode (CPU CI).
+  - ``use_pallas=True``  on TPU -> the real VMEM-tiled kernel.
+
+``softmax_xent`` is differentiable (custom_vjp): forward avoids
+materializing probabilities; backward recomputes ``softmax - onehot``
+blockwise from the saved logits instead of storing probs as residuals.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_argmax_head as _fah
+from repro.kernels import fused_xent as _fx
+from repro.kernels import online_softmax as _os
+from repro.kernels import ref
+
+
+def fused_argmax_head(h, w, *, use_pallas: bool = False,
+                      interpret: bool = True, **block_kw):
+    """argmax_v(h @ w) -> (B,) int32. The paper's reduced unit, fused."""
+    if use_pallas:
+        return _fah.fused_argmax_head(h, w, interpret=interpret, **block_kw)
+    return ref.fused_argmax_head(h, w)
+
+
+def fused_argmax_head_with_value(h, w, *, use_pallas: bool = False,
+                                 interpret: bool = True, **block_kw):
+    if use_pallas:
+        return _fah.fused_argmax_head_with_value(
+            h, w, interpret=interpret, **block_kw)
+    return ref.fused_argmax_head_with_value(h, w)
+
+
+def online_softmax(x, *, use_pallas: bool = False, interpret: bool = True,
+                   **block_kw):
+    """The full softmax unit (baseline)."""
+    if use_pallas:
+        return _os.online_softmax(x, interpret=interpret, **block_kw)
+    return ref.online_softmax(x)
+
+
+def softmax_stats(x, *, use_pallas: bool = False, interpret: bool = True,
+                  **block_kw):
+    if use_pallas:
+        return _os.softmax_stats(x, interpret=interpret, **block_kw)
+    return ref.softmax_stats(x)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused cross-entropy
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def softmax_xent(logits, labels, use_pallas: bool = False,
+                 interpret: bool = True):
+    """Per-row softmax CE, probs never materialized in the forward."""
+    if use_pallas:
+        return _fx.fused_xent(logits, labels, interpret=interpret)
+    return ref.fused_xent(logits, labels)
+
+
+def _xent_fwd(logits, labels, use_pallas, interpret):
+    loss = softmax_xent(logits, labels, use_pallas, interpret)
+    return loss, (logits, labels)
+
+
+def _xent_bwd(use_pallas, interpret, res, g):
+    logits, labels = res
+    # Recompute softmax from logits (no prob residuals).
+    p = ref.online_softmax(logits)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=p.dtype)
+    dlogits = (p - onehot) * g[:, None]
+    return dlogits.astype(logits.dtype), None
+
+
+softmax_xent.defvjp(_xent_fwd, _xent_bwd)

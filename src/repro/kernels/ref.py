@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels_*.py`` sweep shapes/dtypes with assert_allclose)
+and the XLA path the dry-run lowers (so roofline numbers reflect XLA,
+not the interpreter).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# fused_argmax_head: the paper's reduced unit fused with the LM head matmul
+# ---------------------------------------------------------------------------
+def fused_argmax_head(h: jax.Array, w: jax.Array):
+    """argmax_v(h @ w) -> (B,) int32. h: (B, D), w: (D, V)."""
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def fused_argmax_head_with_value(h: jax.Array, w: jax.Array):
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    return (
+        jnp.argmax(logits, axis=-1).astype(jnp.int32),
+        jnp.max(logits, axis=-1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# online_softmax: the full softmax unit (numerically-stable), unit-level
+# ---------------------------------------------------------------------------
+def online_softmax(x: jax.Array):
+    """Stable softmax over the last axis. x: (B, V) -> (B, V) f32."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_stats(x: jax.Array):
+    """(max, sum exp(x - max)) per row — the online-softmax carry."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    l = jnp.sum(jnp.exp(x - m[:, None]), axis=-1)
+    return m, l
+
+
+# ---------------------------------------------------------------------------
+# fused_xent: softmax cross-entropy without materializing the probs
+# ---------------------------------------------------------------------------
+def fused_xent(logits: jax.Array, labels: jax.Array):
+    """Per-row CE loss: logsumexp(logits) - logits[label]. (B, V), (B,) -> (B,)."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1))
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - label_logit
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: tiled attention oracle
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal=True, window=None):
+    """q: (B, Hq, T, hd); k, v: (B, Hkv, S, hd). Plain masked softmax
+    attention with GQA repeat (the thing the kernel avoids)."""
+    b, hq, t, hd = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    q_idx = jnp.arange(t)[:, None]
+    k_idx = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return jnp.einsum("bhts,bhsd->bhtd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

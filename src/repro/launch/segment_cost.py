@@ -1,0 +1,323 @@
+"""Compositional roofline costing (trip-count-aware).
+
+XLA's HloCostAnalysis counts a ``while`` (lax.scan) body once, so costing
+the compiled full step undercounts scanned layer stacks (verified
+empirically: 8-layer scan reports 1 layer of FLOPs).  Instead we lower
+each SEGMENT of the program under the production shardings, cost it, and
+scale by its repeat count:
+
+  train:   embed -> [layer_type x count ...] -> head+loss -> optimizer
+  prefill: embed -> [layer_type x count ...] -> head(mode)
+  decode:  embed -> [layer_type x count ...] -> head(mode)
+
+Every serve cell costs the head segment under BOTH units — 'softmax'
+(baseline: exp + normalize + divide + compare) and 'reduced' (the paper:
+compare only) — so the paper's unit-level claim is visible in every cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec, per_layer_attn_count
+from repro.launch import hlo_stats
+from repro.models import api, lm
+from repro.models.layers import cdtype
+from repro.optim import optimizer as opt_mod
+from repro.parallel import env, sharding
+
+
+def _ns(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _lower_cost(fn, mesh, args, in_specs) -> hlo_stats.RooflineTerms:
+    jitted = jax.jit(fn, in_shardings=_ns(mesh, in_specs))
+    with mesh, env.use_mesh(mesh):
+        compiled = jitted.lower(*args).compile()
+    return hlo_stats.cost_terms(compiled)
+
+
+def _slot0(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                        tree)
+
+
+def _layer_counts(cfg: ModelConfig):
+    counts: Dict[str, int] = {}
+    for unit, count in lm.segments(cfg):
+        for t in unit:
+            counts[t] = counts.get(t, 0) + count
+    return counts
+
+
+def _first_slot_params(cfg: ModelConfig, kind: str):
+    """Abstract single-layer params of the given type."""
+    pstruct = api.params_struct(cfg)
+    for seg, (unit, count) in zip(pstruct["decoder"], lm.segments(cfg)):
+        for j, t in enumerate(unit):
+            if t == kind:
+                return _slot0(seg[f"slot{j}"])
+    if kind == "enc":
+        seg = pstruct["encoder"][0]
+        return _slot0(seg["slot0"])
+    raise KeyError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Cell costing
+# ---------------------------------------------------------------------------
+def train_cell(cfg: ModelConfig, opt_cfg, mesh, shape: ShapeSpec) -> dict:
+    B, S, D = shape.global_batch, shape.seq_len, cfg.d_model
+    dt = cdtype(cfg)
+    ba = sharding.batch_axes(mesh, B)
+    bspec = ba if ba else None
+    x_spec = P(bspec, None, None)
+    tok_spec = P(bspec, None)
+    x_struct = jax.ShapeDtypeStruct((B, S, D), dt)
+    tok_struct = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    positions = jnp.arange(S)
+    segments: Dict[str, dict] = {}
+
+    def add(name, count, terms):
+        segments[name] = dict(count=count, **terms.as_dict())
+        return terms.scaled(count)
+
+    total = hlo_stats.ZERO
+
+    # --- embed (+ scatter-add backward) ---
+    emb = api.params_struct(cfg)["embed"]
+    emb_spec = sharding.param_specs({"embed": emb}, mesh, cfg)["embed"]
+
+    def embed_fwd_bwd(w, toks, ct):
+        y, vjp = jax.vjp(lambda ww: ww.astype(dt)[toks], w)
+        return y, vjp(ct)
+
+    total += add("embed", 1, _lower_cost(
+        embed_fwd_bwd, mesh, (emb, tok_struct, x_struct),
+        (emb_spec, tok_spec, x_spec)))
+
+    # --- layers (fwd + bwd under the remat policy) ---
+    enc_struct = None
+    if cfg.n_encoder_layers:
+        enc_struct = jax.ShapeDtypeStruct((B, S, D), dt)
+
+    def layer_cost(kind: str, count: int):
+        slot = _first_slot_params(cfg, kind)
+        sspec = sharding.param_specs(slot, mesh, cfg)
+
+        def inner(pp, xx, ee=None):
+            pp = lm.cast_params(pp, cfg)
+            y, _, aux = lm._apply_layer(
+                pp, xx, cfg, kind, positions=positions, enc_out=ee,
+                mode="train")
+            return y, aux
+
+        inner = lm._maybe_remat(inner, cfg)
+
+        if kind == "xattn":
+            def fn(p, x, enc, ct):
+                (y, aux), vjp = jax.vjp(inner, p, x, enc)
+                return y, vjp((ct, jnp.ones((), jnp.float32)))
+
+            args = (slot, x_struct, enc_struct, x_struct)
+            specs = (sspec, x_spec, x_spec, x_spec)
+        else:
+            def fn(p, x, ct):
+                (y, aux), vjp = jax.vjp(lambda pp, xx: inner(pp, xx), p, x)
+                return y, vjp((ct, jnp.ones((), jnp.float32)))
+
+            args = (slot, x_struct, x_struct)
+            specs = (sspec, x_spec, x_spec)
+        return add(f"layer_{kind}", count, _lower_cost(fn, mesh, args, specs))
+
+    for kind, count in _layer_counts(cfg).items():
+        total += layer_cost(kind, count)
+    if cfg.n_encoder_layers:
+        total += layer_cost("enc", cfg.n_encoder_layers)
+
+    # --- head + loss (fwd + bwd) ---
+    pstruct = api.params_struct(cfg)
+    head_tree = {"embed": pstruct["embed"],
+                 "final_norm": pstruct["final_norm"]}
+    if not cfg.tie_embeddings:
+        head_tree["lm_head"] = pstruct["lm_head"]
+    head_specs = sharding.param_specs(head_tree, mesh, cfg)
+
+    def head_loss(hp, x, labels):
+        def inner(hpp, xx):
+            hpp = lm.cast_params(hpp, cfg)
+            h = lm.final_hidden(hpp, cfg, xx)
+            logits = lm.logits_fn(hpp, cfg, h)
+            return api.xent_loss(logits, labels)
+
+        loss, vjp = jax.vjp(inner, hp, x)
+        return loss, vjp(jnp.ones((), jnp.float32))
+
+    total += add("head_loss", 1, _lower_cost(
+        head_loss, mesh, (head_tree, x_struct, tok_struct),
+        (head_specs, x_spec, tok_spec)))
+
+    # --- optimizer update over the full param tree ---
+    params = pstruct
+    pspecs = sharding.param_specs(params, mesh, cfg)
+    opt_struct = jax.eval_shape(lambda p: opt_mod.init_state(opt_cfg, p),
+                                params)
+    ospecs = sharding.opt_state_specs(opt_struct, pspecs)
+
+    def opt_step(grads, state, p):
+        return opt_mod.update(opt_cfg, grads, state, p)[:2]
+
+    total += add("optimizer", 1, _lower_cost(
+        opt_step, mesh, (params, opt_struct, params),
+        (pspecs, ospecs, pspecs)))
+
+    return dict(segments=segments, totals=total.as_dict())
+
+
+def serve_cell(cfg: ModelConfig, mesh, shape: ShapeSpec,
+               kind: str, serve_weights: str = "train") -> dict:
+    """kind: 'prefill' | 'decode'. Costs layers once and the head under
+    both units."""
+    B, S, D = shape.global_batch, shape.seq_len, cfg.d_model
+    dt = cdtype(cfg)
+    ba = sharding.batch_axes(mesh, B)
+    bspec = ba if ba else None
+    T = S if kind == "prefill" else 1
+    x_spec = P(bspec, None, None)
+    x_struct = jax.ShapeDtypeStruct((B, T, D), dt)
+    positions = jnp.arange(S) if kind == "prefill" else None
+    pos_scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    segments: Dict[str, dict] = {}
+    total = hlo_stats.ZERO
+
+    def add(name, count, terms, accumulate=True):
+        segments[name] = dict(count=count, **terms.as_dict())
+        return terms.scaled(count) if accumulate else hlo_stats.ZERO
+
+    enc_struct = (jax.ShapeDtypeStruct((B, S, D), dt)
+                  if cfg.n_encoder_layers else None)
+
+    def pspec_of(tree):
+        if serve_weights == "replicated":
+            return sharding.serve_param_specs(tree, mesh, cfg)
+        return sharding.param_specs(tree, mesh, cfg)
+
+    for lk, count in _layer_counts(cfg).items():
+        slot = _first_slot_params(cfg, lk)
+        sspec = pspec_of(slot)
+        if kind == "prefill":
+            def fn(p, x, enc=None, _lk=lk):
+                p = lm.cast_params(p, cfg)
+                y, c, _ = lm._apply_layer(
+                    p, x, cfg, _lk, positions=positions, enc_out=enc,
+                    mode="prefill", max_len=S)
+                return y, c
+
+            if lk == "xattn":
+                terms = _lower_cost(fn, mesh, (slot, x_struct, enc_struct),
+                                    (sspec, x_spec, x_spec))
+            else:
+                terms = _lower_cost(lambda p, x, _lk=lk: fn(p, x, None, _lk),
+                                    mesh, (slot, x_struct), (sspec, x_spec))
+        else:
+            cache = jax.eval_shape(
+                lambda: _slot_cache_struct(cfg, lk, B, S, enc_struct))
+            cspec = sharding.cache_specs(cache, mesh, B)
+
+            def fn(p, x, c, pos, _lk=lk):
+                p = lm.cast_params(p, cfg)
+                y, nc, _ = lm._apply_layer(
+                    p, x, cfg, _lk, positions=jnp.reshape(pos, (1,)),
+                    cache=c, cache_pos=(pos if _lk not in ("rwkv", "rec")
+                                        else None),
+                    mode="decode")
+                return y, nc
+
+            terms = _lower_cost(fn, mesh, (slot, x_struct, cache, pos_scalar),
+                                (sspec, x_spec, cspec, P()))
+        total += add(f"layer_{lk}", count, terms)
+
+    if cfg.n_encoder_layers and kind == "prefill":
+        slot = _first_slot_params(cfg, "enc")
+        sspec = pspec_of(slot)
+
+        def enc_fn(p, x):
+            p = lm.cast_params(p, cfg)
+            y, _, _ = lm._apply_layer(p, x, cfg, "enc",
+                                      positions=jnp.arange(S), mode="train")
+            return y
+
+        total += add("layer_enc", cfg.n_encoder_layers, _lower_cost(
+            enc_fn, mesh, (slot, x_struct), (sspec, x_spec)))
+
+    # --- the head: both units (paper comparison), reduced in the total ---
+    pstruct = api.params_struct(cfg)
+    head_tree = {"embed": pstruct["embed"],
+                 "final_norm": pstruct["final_norm"]}
+    if not cfg.tie_embeddings:
+        head_tree["lm_head"] = pstruct["lm_head"]
+    head_specs = pspec_of(head_tree)
+    h_struct = jax.ShapeDtypeStruct((B, D), dt)
+    h_spec = P(bspec, None)
+
+    for mode in ("softmax", "reduced"):
+        def head_fn(hp, h, _m=mode):
+            hp = lm.cast_params(hp, cfg)
+            hh = lm.final_hidden(hp, cfg, h)
+            return api._head_predict(hp, cfg, hh, _m)
+
+        terms = _lower_cost(head_fn, mesh, (head_tree, h_struct),
+                            (head_specs, h_spec))
+        total += add(f"head_{mode}", 1, terms, accumulate=(mode == "reduced"))
+
+    return dict(segments=segments, totals=total.as_dict())
+
+
+def _slot_cache_struct(cfg: ModelConfig, kind: str, B: int, max_len: int,
+                       enc_struct=None):
+    base = lm._layer_cache(cfg, kind, B, max_len)
+    if kind in ("rwkv", "rec"):
+        return base
+    out = {"attn": base}
+    if kind == "xattn" and enc_struct is not None:
+        out["xk"] = jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.head_dim),
+                              cdtype(cfg))
+        out["xv"] = jnp.zeros_like(out["xk"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic useful FLOPs (MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6*N*D (train) / 2*N per token (serve), N = active matmul params,
+    plus attention score/output FLOPs."""
+    n_active = cfg.active_param_count()
+    # input embedding is a gather, not a matmul; tied heads still matmul
+    n_mat = n_active - cfg.vocab_size * cfg.d_model * (
+        1 if cfg.tie_embeddings else 1)
+    if cfg.tie_embeddings:
+        n_mat += cfg.vocab_size * cfg.d_model  # head matmul happens anyway
+    tokens = shape.global_batch * shape.seq_len
+    n_attn = per_layer_attn_count(cfg) + cfg.n_encoder_layers + (
+        cfg.n_layers if cfg.n_encoder_layers else 0)  # cross-attn
+    w = cfg.attention_window
+    if shape.kind == "train":
+        s_avg = shape.seq_len / 2 if w is None else min(shape.seq_len / 2, w)
+        attn = 12.0 * tokens * s_avg * cfg.q_width * n_attn
+        return 6.0 * tokens * n_mat + attn
+    if shape.kind == "prefill":
+        s_avg = shape.seq_len / 2 if w is None else min(shape.seq_len / 2, w)
+        attn = 4.0 * tokens * s_avg * cfg.q_width * n_attn
+        return 2.0 * tokens * n_mat + attn
+    # decode: one token per sequence against an S-entry cache
+    s_kv = shape.seq_len if w is None else min(shape.seq_len, w)
+    attn = 4.0 * shape.global_batch * s_kv * cfg.q_width * n_attn
+    return 2.0 * shape.global_batch * n_mat + attn

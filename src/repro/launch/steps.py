@@ -1,0 +1,165 @@
+"""Jittable step functions + their sharding specs (pjit entry points).
+
+ - train_step: fwd + bwd + AdamW update (donated state)
+ - prefill_step: prompt pass -> (next_token, decode cache)
+ - decode_step: one token with cache -> (next_token, new cache), with the
+   paper's head modes ('softmax' baseline / 'reduced' / 'fused')
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import api, lm
+from repro.optim import optimizer as opt_mod
+from repro.parallel import env, sharding
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.AdamWConfig):
+    def train_step(state, batch):
+        def loss_fn(p):
+            return api.train_loss(p, cfg, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        new_p, new_opt, metrics = opt_mod.update(
+            opt_cfg, grads, state["opt"], state["params"])
+        return {"params": new_p, "opt": new_opt}, dict(metrics, loss=loss)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      head_mode: str = "reduced"):
+    def prefill_step(params, batch):
+        return api.serve_prefill(params, cfg, batch, max_len,
+                                 head_mode=head_mode)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, head_mode: str = "reduced"):
+    def decode_step(params, token, cache, pos):
+        return api.serve_decode(params, cfg, token, cache, pos,
+                                head_mode=head_mode)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract structs (no allocation)
+# ---------------------------------------------------------------------------
+def train_state_struct(cfg: ModelConfig, opt_cfg: opt_mod.AdamWConfig):
+    p = api.params_struct(cfg)
+    o = jax.eval_shape(lambda pp: opt_mod.init_state(opt_cfg, pp), p)
+    return {"params": p, "opt": o}
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+def train_specs(cfg: ModelConfig, opt_cfg, mesh, shape: ShapeSpec):
+    state = train_state_struct(cfg, opt_cfg)
+    pspecs = sharding.param_specs(state["params"], mesh, cfg)
+    ospecs = sharding.opt_state_specs(state["opt"], pspecs)
+    bstruct = api.batch_struct(cfg, shape)
+    bspecs = sharding.batch_specs(bstruct, mesh, shape.global_batch)
+    state_specs = {"params": pspecs, "opt": ospecs}
+    return state, state_specs, bstruct, bspecs
+
+
+def serve_structs(cfg: ModelConfig, shape: ShapeSpec):
+    params = api.params_struct(cfg)
+    # Serving stores weights in the compute dtype (bf16): halves residency
+    # and, crucially, removes the per-step f32->bf16 cast that re-reads the
+    # whole f32 master copy (125 GB/dev/step on qwen3-32b; §Perf iter 2).
+    cdt = jnp.dtype(cfg.dtype)
+    params = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, cdt)
+        if a.dtype == jnp.float32 else a, params)
+    batch = api.batch_struct(cfg, shape)
+    cache = api.cache_struct(params, cfg, shape.global_batch, shape.seq_len)
+    return params, batch, cache
+
+
+def serve_specs(cfg: ModelConfig, mesh, shape: ShapeSpec,
+                weights: str = "train"):
+    params, batch, cache = serve_structs(cfg, shape)
+    if weights == "replicated":
+        pspecs = sharding.serve_param_specs(params, mesh, cfg)
+    else:
+        pspecs = sharding.param_specs(params, mesh, cfg)
+    bspecs = sharding.batch_specs(batch, mesh, shape.global_batch)
+    cspecs = sharding.cache_specs(cache, mesh, shape.global_batch)
+    return (params, batch, cache), (pspecs, bspecs, cspecs)
+
+
+def token_spec(mesh, global_batch):
+    ba = sharding.batch_axes(mesh, global_batch)
+    return P(ba if ba else None, None)
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers (used by dryrun + benchmarks)
+# ---------------------------------------------------------------------------
+def lower_train(cfg, opt_cfg, mesh, shape: ShapeSpec, donate=True):
+    state, sspecs, bstruct, bspecs = train_specs(cfg, opt_cfg, mesh, shape)
+    step = make_train_step(cfg, opt_cfg)
+    ns = lambda t: sharding.named(t, mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(ns(sspecs), ns(bspecs)),
+        out_shardings=(ns(sspecs), None),
+        donate_argnums=(0,) if donate else (),
+    )
+    with mesh, env.use_mesh(mesh):
+        return jitted.lower(state, bstruct)
+
+
+def lower_prefill(cfg, mesh, shape: ShapeSpec, head_mode="reduced",
+                  serve_weights: str = "train"):
+    (params, batch, cache), (pspecs, bspecs, cspecs) = serve_specs(
+        cfg, mesh, shape, weights=serve_weights)
+    step = make_prefill_step(cfg, shape.seq_len, head_mode)
+    ns = lambda t: sharding.named(t, mesh)
+    tok_sh = NamedSharding(mesh, P(sharding.batch_axes(
+        mesh, shape.global_batch) or None))
+    jitted = jax.jit(
+        step,
+        in_shardings=(ns(pspecs), ns(bspecs)),
+        out_shardings=(tok_sh, ns(cspecs)),
+    )
+    batch = {k: v for k, v in batch.items() if k != "labels"}
+    bspecs = {k: v for k, v in bspecs.items() if k != "labels"}
+    with mesh, env.use_mesh(mesh):
+        return jitted.lower(params, batch)
+
+
+def lower_decode(cfg, mesh, shape: ShapeSpec, head_mode="reduced",
+                 donate=True, serve_weights: str = "train"):
+    (params, batch, cache), (pspecs, bspecs, cspecs) = serve_specs(
+        cfg, mesh, shape, weights=serve_weights)
+    step = make_decode_step(cfg, head_mode)
+    ns = lambda t: sharding.named(t, mesh)
+    B = shape.global_batch
+    ba = sharding.batch_axes(mesh, B)
+    tok_in = NamedSharding(mesh, P(ba or None, None))
+    tok_out = NamedSharding(mesh, P(ba or None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    jitted = jax.jit(
+        step,
+        in_shardings=(ns(pspecs), tok_in, ns(cspecs),
+                      NamedSharding(mesh, P())),
+        out_shardings=(tok_out, ns(cspecs)),
+        donate_argnums=(2,) if donate else (),
+    )
+    with mesh, env.use_mesh(mesh):
+        return jitted.lower(params, token, cache, pos)

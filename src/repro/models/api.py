@@ -1,0 +1,139 @@
+"""Public model API: loss, serve steps, input specs for every (arch, shape).
+
+The two serve head modes implement the paper's comparison at system level:
+
+  head_mode='softmax'  BASELINE: the engine materializes softmax
+                       probabilities over the vocab, then takes the max —
+                       what a probability-reporting accelerator must do.
+  head_mode='reduced'  THE PAPER: greedy class = argmax of raw logits; no
+                       exp, no normalizing sum, no divide. Bit-identical
+                       predictions (Theorem 1), strictly less work.
+  head_mode='fused'    BEYOND-PAPER: reduced head via the Pallas kernel —
+                       logits are never materialized in HBM.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import reduced_softmax
+from repro.models import lm
+from repro.models.layers import cdtype
+
+
+# ---------------------------------------------------------------------------
+# Loss (SPMD-friendly: no gather over the sharded vocab axis)
+# ---------------------------------------------------------------------------
+def xent_loss(logits: jax.Array, labels: jax.Array,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean softmax-CE. logits (..., V) f32; labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    # one-hot-free label pick: SPMD-partitions cleanly over a sharded vocab
+    viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                     logits.ndim - 1)
+    hit = viota == labels[..., None]
+    lab_logit = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    per_tok = lse - lab_logit
+    if mask is None:
+        return jnp.mean(per_tok)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    logits, aux = lm.forward(params, cfg, batch)
+    loss = xent_loss(logits, batch["labels"], batch.get("loss_mask"))
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+def _head_predict(params, cfg: ModelConfig, h: jax.Array,
+                  head_mode: str) -> jax.Array:
+    """h: (B, D) -> (B,) int32 predicted next token."""
+    w = lm.lm_head_weight(params, cfg).astype(cdtype(cfg))
+    if head_mode == "fused":
+        return reduced_softmax.fused_reduced_head(
+            h, w, use_pallas=cfg.use_pallas)
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    if head_mode == "softmax":
+        # Baseline unit: exp + normalize + divide, THEN compare.
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    if head_mode == "reduced":
+        # The paper's unit: comparator only.
+        return reduced_softmax.reduced_softmax_predict(logits).astype(
+            jnp.int32)
+    raise ValueError(head_mode)
+
+
+def serve_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
+                  head_mode: str = "reduced"):
+    """Prompt pass: returns (next_token (B,), cache)."""
+    h, cache = lm.prefill(params, cfg, batch, max_len)
+    return _head_predict(params, cfg, h, head_mode), cache
+
+
+def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
+                 pos: jax.Array, head_mode: str = "reduced"):
+    """One token step: returns (next_token (B,), new_cache)."""
+    h, new_cache = lm.decode_step(params, cfg, token, cache, pos)
+    return _head_predict(params, cfg, h, head_mode), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation) per (arch, shape)
+# ---------------------------------------------------------------------------
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Host-side batch spec for the given input shape (train/prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cdtype(cfg)
+    if cfg.n_encoder_layers:
+        # enc-dec: frontend STUB supplies precomputed frame embeddings.
+        b = {
+            "src_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif cfg.num_image_tokens:
+        b = {
+            "image_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    else:
+        b = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        b["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return b
+
+
+def cache_struct(params_struct, cfg: ModelConfig, batch_size: int,
+                 max_len: int):
+    """Decode-cache spec via eval_shape (no allocation)."""
+    enc_struct = None
+    if cfg.n_encoder_layers:
+        enc_struct = jax.ShapeDtypeStruct(
+            (batch_size, max_len, cfg.d_model), cdtype(cfg))
+
+    def mk(params, enc):
+        return lm.init_cache(params, cfg, batch_size, max_len, enc)
+
+    if enc_struct is None:
+        return jax.eval_shape(lambda p: lm.init_cache(
+            p, cfg, batch_size, max_len), params_struct)
+    return jax.eval_shape(mk, params_struct, enc_struct)
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0))

@@ -1,0 +1,509 @@
+"""Unified model assembly: block programs over six architecture families.
+
+A config lowers to a *block program*: a list of segments
+``(unit, count)`` where ``unit`` is a tuple of layer types applied in
+sequence and ``count`` is how many times the unit repeats.  Each segment is
+a single ``lax.scan`` over stacked params, so a 96-layer model lowers to a
+compact HLO while remaining shardable with pjit.
+
+Layer types:
+  'attn'   causal self-attention + MLP            (dense/vlm archs)
+  'moe'    causal self-attention + MoE FF         (moe archs)
+  'rec'    RG-LRU recurrent block + MLP           (hybrid)
+  'rwkv'   RWKV6 time-mix + channel-mix           (ssm)
+  'enc'    bidirectional self-attention + MLP     (encoder stack)
+  'xattn'  causal self-attn + cross-attn + MLP    (enc-dec decoder)
+
+Three execution modes share the same layer code:
+  train    full sequence, no cache
+  prefill  full sequence, returns a populated decode cache
+  decode   T=1 with cache (ring-buffer cache for windowed attention)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru, rwkv6
+from repro.models.layers import (
+    attention,
+    cdtype,
+    init_attention,
+    init_mlp,
+    init_moe,
+    mlp,
+    moe_layer,
+    rms_norm,
+)
+
+# ---------------------------------------------------------------------------
+# Block programs
+# ---------------------------------------------------------------------------
+def segments(cfg: ModelConfig):
+    """Decoder block program: list of (unit, count)."""
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        return [(("attn",), L)]
+    if cfg.family == "moe":
+        s = cfg.moe.interleave_step
+        if s == 1:
+            return [(("moe",), L)]
+        unit = tuple(("moe" if (i % s == s - 1) else "attn")
+                     for i in range(s))
+        return [(unit, L // s)]
+    if cfg.family == "ssm":
+        return [(("rwkv",), L)]
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid_pattern
+        full, rem = divmod(L, len(pat))
+        segs = [(tuple(pat), full)]
+        if rem:
+            segs.append((tuple(pat[:rem]), 1))
+        return segs
+    if cfg.family == "encdec":
+        return [(("xattn",), L)]
+    raise ValueError(cfg.family)
+
+
+def encoder_segments(cfg: ModelConfig):
+    return [(("enc",), cfg.n_encoder_layers)] if cfg.n_encoder_layers else []
+
+
+def layer_types(cfg: ModelConfig):
+    out = []
+    for unit, count in segments(cfg):
+        out += list(unit) * count
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "rwkv":
+        return rwkv6.init_rwkv_layer(ks[0], cfg)
+    if kind == "rec":
+        return {
+            "rec": rglru.init_rglru_layer(ks[0], cfg),
+            "ln2": jnp.zeros((d,)),
+            "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.activation),
+        }
+    p = {
+        "ln1": jnp.zeros((d,)),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": jnp.zeros((d,)),
+    }
+    if kind == "moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.activation)
+    if kind == "xattn":
+        p["lnx"] = jnp.zeros((d,))
+        p["xattn"] = init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _init_segment(key, cfg: ModelConfig, unit, count: int):
+    seg = {}
+    for j, t in enumerate(unit):
+        ks = jax.random.split(jax.random.fold_in(key, j), count)
+        seg[f"slot{j}"] = jax.vmap(lambda k, _t=t: _init_layer(k, cfg, _t))(ks)
+    return seg
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kE, kH, kD, kEnc = jax.random.split(key, 4)
+    d, v = cfg.d_model, cfg.vocab_size
+    params = {
+        "embed": jax.random.normal(kE, (v, d)) * (1.0 / math.sqrt(d)),
+        "final_norm": jnp.zeros((d,)),
+        "decoder": [
+            _init_segment(jax.random.fold_in(kD, i), cfg, unit, count)
+            for i, (unit, count) in enumerate(segments(cfg))
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kH, (d, v)) * (1.0 / math.sqrt(d))
+    if cfg.n_encoder_layers:
+        params["encoder"] = [
+            _init_segment(jax.random.fold_in(kEnc, i), cfg, unit, count)
+            for i, (unit, count) in enumerate(encoder_segments(cfg))
+        ]
+        params["encoder_norm"] = jnp.zeros((d,))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by all modes)
+# ---------------------------------------------------------------------------
+def _moe_impl(cfg: ModelConfig, mode: str) -> str:
+    if cfg.moe_impl != "auto":
+        return cfg.moe_impl
+    return "scatter" if mode == "decode" else "gshard"
+
+
+def build_cache_from_kv(k: jax.Array, v: jax.Array, cfg: ModelConfig,
+                        max_len: int):
+    """Turn prefill K/V (B, S, Hkv, hd) into a decode cache.
+
+    Linear layout padded to max_len for full attention; ring-buffer layout
+    (size = window) for sliding-window attention.
+    """
+    B, S = k.shape[:2]
+    w = cfg.attention_window
+    dt = cdtype(cfg)
+    if w is not None:
+        s_cache = min(max_len, w)
+        if S >= s_cache:
+            # last s_cache entries land at slot = pos % w
+            pos = jnp.arange(S - s_cache, S)
+            slots = pos % s_cache
+            ck = jnp.zeros((B, s_cache) + k.shape[2:], dt).at[:, slots].set(
+                k[:, -s_cache:].astype(dt))
+            cv = jnp.zeros((B, s_cache) + v.shape[2:], dt).at[:, slots].set(
+                v[:, -s_cache:].astype(dt))
+        else:
+            pad = s_cache - S
+            ck = jnp.pad(k.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(v.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": ck, "v": cv}
+    pad = max_len - S
+    ck = jnp.pad(k.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(v.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": ck, "v": cv}
+
+
+def _apply_layer(p, x, cfg: ModelConfig, kind: str, *, positions,
+                 enc_out=None, cache=None, cache_pos=None, mode="train",
+                 max_len: int = 0):
+    """Returns (x, new_cache_or_None, aux_loss).
+
+    mode='prefill' runs cache-less attention and BUILDS the decode cache
+    from the computed K/V; mode='decode' updates the given cache in place.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.attention_window
+    new_cache = None
+    if kind == "rwkv":
+        state = cache if cache is not None else rwkv6.init_rwkv_state(
+            cfg, x.shape[0], cdtype(cfg))
+        x, state_out = rwkv6.rwkv_block(p, x, cfg, state)
+        return x, (state_out if mode != "train" else None), aux
+    if kind == "rec":
+        state = cache["rec"] if cache is not None else rglru.init_rglru_state(
+            cfg, x.shape[0], cdtype(cfg))
+        x, rec_state = rglru.rglru_block(p["rec"], x, cfg, state)
+        h = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+        return x + h, ({"rec": rec_state} if mode != "train" else None), aux
+
+    # attention-bearing layers
+    prefill = mode == "prefill"
+    attn_cache = cache.get("attn") if cache is not None else None
+    a, extra = attention(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+        positions=positions, causal=(kind != "enc"),
+        window=(window if kind != "enc" else None),
+        cache=attn_cache, cache_pos=cache_pos, return_kv=prefill,
+        use_flash=(cfg.use_pallas and mode == "prefill"))
+    x = x + a
+    if prefill and extra is not None:
+        new_cache = {"attn": build_cache_from_kv(*extra, cfg, max_len)}
+    elif extra is not None:
+        new_cache = {"attn": extra}
+    if kind == "xattn":
+        if cache is not None and "xk" in cache:
+            xa, _ = attention(
+                p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), cfg,
+                positions=positions, kv_x=None, causal=False,
+                cache={"k": cache["xk"], "v": cache["xv"]}, cache_pos=None)
+        else:
+            xa, _ = attention(
+                p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), cfg,
+                positions=positions, kv_x=enc_out, causal=False)
+        x = x + xa
+        if new_cache is not None and cache is not None and "xk" in cache:
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    h_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        h, aux = moe_layer(p["moe"], h_in, cfg, impl=_moe_impl(cfg, mode),
+                           group_size=cfg.moe_group_size)
+    else:
+        h = mlp(p["mlp"], h_in, cfg.activation)
+    return x + h, new_cache, aux
+
+
+def _cross_kv(p, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (read-only cache)."""
+    from repro.models.layers import _split_heads
+    k = _split_heads(enc_out @ p["xattn"]["wk"].astype(enc_out.dtype),
+                     cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(enc_out @ p["xattn"]["wv"].astype(enc_out.dtype),
+                     cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Remat policy
+# ---------------------------------------------------------------------------
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # 'full': save nothing
+
+
+# ---------------------------------------------------------------------------
+# Stack runners
+# ---------------------------------------------------------------------------
+def _run_stack(stack_params, segs, x, cfg: ModelConfig, *, positions,
+               enc_out=None, mode="train"):
+    """Train/eval forward through a block program (no cache). Returns
+    (x, total_aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    for seg_params, (unit, count) in zip(stack_params, segs):
+        def unit_body(carry, slot_params, _unit=unit):
+            h, aux_c = carry
+            for j, kind in enumerate(_unit):
+                h, _, aux = _apply_layer(
+                    slot_params[f"slot{j}"], h, cfg, kind,
+                    positions=positions, enc_out=enc_out, mode=mode)
+                aux_c = aux_c + aux
+            return (h, aux_c), None
+
+        body = _maybe_remat(unit_body, cfg)
+        if cfg.scan_layers and count > 1:
+            (x, total_aux), _ = jax.lax.scan(
+                body, (x, total_aux), seg_params)
+        else:
+            for i in range(count):
+                sl = jax.tree.map(lambda a: a[i], seg_params)
+                (x, total_aux), _ = body((x, total_aux), sl)
+    return x, total_aux
+
+
+def _run_stack_prefill(stack_params, segs, x, cfg: ModelConfig, *,
+                       positions, max_len: int, enc_out=None):
+    """Forward + build the decode cache. Returns (x, cache_list)."""
+    caches = []
+    for seg_params, (unit, count) in zip(stack_params, segs):
+        def unit_body(h, slot_params, _unit=unit):
+            out_cache = {}
+            for j, kind in enumerate(_unit):
+                h, new_c, _ = _apply_layer(
+                    slot_params[f"slot{j}"], h, cfg, kind,
+                    positions=positions, enc_out=enc_out,
+                    mode="prefill", max_len=max_len)
+                if new_c is not None:
+                    out_cache[f"slot{j}"] = new_c
+            return h, out_cache
+
+        if cfg.scan_layers and count > 1:
+            x, seg_cache = jax.lax.scan(unit_body, x, seg_params)
+        else:
+            outs = []
+            for i in range(count):
+                sl = jax.tree.map(lambda a: a[i], seg_params)
+                x, c = unit_body(x, sl)
+                outs.append(c)
+            seg_cache = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        caches.append(seg_cache)
+    return x, caches
+
+
+def _needs_kv(kind: str) -> bool:
+    return kind in ("attn", "moe", "xattn", "enc")
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, B: int, max_len: int):
+    """Fresh (empty) cache for one layer (decode-from-scratch dry-runs)."""
+    dt = cdtype(cfg)
+    if kind == "rwkv":
+        return rwkv6.init_rwkv_state(cfg, B, dt)
+    if kind == "rec":
+        return {"rec": rglru.init_rglru_state(cfg, B, dt)}
+    s_cache = max_len
+    if cfg.attention_window is not None:
+        s_cache = min(max_len, cfg.attention_window)
+    return {
+        "k": jnp.zeros((B, s_cache, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((B, s_cache, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def _run_stack_decode(stack_params, segs, x, caches, cfg: ModelConfig, *,
+                      pos):
+    """One decode step. x: (B, 1, D). Returns (x, new_caches)."""
+    positions = jnp.reshape(pos, (1,))
+    new_caches = []
+    for seg_params, seg_cache, (unit, count) in zip(stack_params, caches,
+                                                    segs):
+        def unit_body(h, xs, _unit=unit):
+            slot_params, slot_cache = xs
+            out_cache = {}
+            for j, kind in enumerate(_unit):
+                h, new_c, _ = _apply_layer(
+                    slot_params[f"slot{j}"], h, cfg, kind,
+                    positions=positions,
+                    cache=slot_cache[f"slot{j}"],
+                    cache_pos=(pos if _needs_kv(kind) else None),
+                    mode="decode")
+                out_cache[f"slot{j}"] = new_c
+            return h, out_cache
+
+        if cfg.scan_layers and count > 1:
+            x, seg_new = jax.lax.scan(unit_body, x, (seg_params, seg_cache))
+        else:
+            outs = []
+            for i in range(count):
+                sl = jax.tree.map(lambda a: a[i], seg_params)
+                sc = jax.tree.map(lambda a: a[i], seg_cache)
+                x, c = unit_body(x, (sl, sc))
+                outs.append(c)
+            seg_new = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        new_caches.append(seg_new)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def cast_params(params, cfg: ModelConfig):
+    """Mixed precision: f32 master weights -> compute dtype once per step."""
+    dt = cdtype(cfg)
+    if dt == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, params)
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array,
+                 image_embeds: Optional[jax.Array] = None) -> jax.Array:
+    dt = cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.num_image_tokens and image_embeds is not None:
+        # VLM stub frontend: precomputed patch embeddings occupy the first
+        # num_image_tokens positions.
+        n = image_embeds.shape[1]
+        x = jnp.concatenate([image_embeds.astype(dt), x[:, n:]], axis=1)
+    return x
+
+
+def lm_head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def final_hidden(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_fn(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """(B, T, D) -> (B, T, V) f32 logits."""
+    w = lm_head_weight(params, cfg).astype(cdtype(cfg))
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+def encode(params, cfg: ModelConfig, src_embeds: jax.Array) -> jax.Array:
+    """Encoder stack over precomputed frontend embeddings (audio stub)."""
+    params = cast_params(params, cfg)
+    x = src_embeds.astype(cdtype(cfg))
+    positions = jnp.arange(x.shape[1])
+    x, _ = _run_stack(params["encoder"], encoder_segments(cfg), x, cfg,
+                      positions=positions, mode="train")
+    return rms_norm(x, params["encoder_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: dict):
+    """Training/eval forward. Returns (logits, aux_loss).
+
+    batch keys: 'tokens' (B,S); optional 'image_embeds' (vlm),
+    'src_embeds' (encdec).
+    """
+    enc_out = None
+    if cfg.n_encoder_layers:
+        enc_out = encode(params, cfg, batch["src_embeds"])
+    params = cast_params(params, cfg)
+    x = embed_tokens(params, cfg, batch["tokens"],
+                     batch.get("image_embeds"))
+    positions = jnp.arange(x.shape[1])
+    x, aux = _run_stack(params["decoder"], segments(cfg), x, cfg,
+                        positions=positions, enc_out=enc_out, mode="train")
+    x = final_hidden(params, cfg, x)
+    return logits_fn(params, cfg, x), aux
+
+
+def init_cache(params, cfg: ModelConfig, batch_size: int, max_len: int,
+               enc_out: Optional[jax.Array] = None):
+    """Fresh decode cache (used directly for decode-from-scratch dry-runs)."""
+    caches = []
+    for seg_params, (unit, count) in zip(params["decoder"], segments(cfg)):
+        seg_cache = {}
+        for j, kind in enumerate(unit):
+            base = _layer_cache(cfg, kind, batch_size, max_len)
+            if kind in ("rwkv", "rec"):
+                entry = jax.tree.map(lambda a: _stack(a, count), base)
+            else:
+                entry = {"attn": jax.tree.map(lambda a: _stack(a, count),
+                                              base)}
+                if kind == "xattn" and enc_out is not None:
+                    k, v = jax.vmap(
+                        lambda sp: _cross_kv(sp, enc_out, cfg))(
+                        seg_params[f"slot{j}"])
+                    entry["xk"], entry["xv"] = k, v
+            seg_cache[f"slot{j}"] = entry
+        caches.append(seg_cache)
+    return caches
+
+
+def _stack(a, count):
+    return jnp.broadcast_to(a[None], (count,) + a.shape)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Process the prompt, return (last_hidden (B,D), cache)."""
+    enc_out = None
+    if cfg.n_encoder_layers:
+        enc_out = encode(params, cfg, batch["src_embeds"])
+    params = cast_params(params, cfg)
+    x = embed_tokens(params, cfg, batch["tokens"], batch.get("image_embeds"))
+    positions = jnp.arange(x.shape[1])
+    x, caches = _run_stack_prefill(
+        params["decoder"], segments(cfg), x, cfg, positions=positions,
+        max_len=max_len, enc_out=enc_out)
+    # attach read-only cross K/V for decode
+    if enc_out is not None:
+        for seg_params, seg_cache, (unit, count) in zip(
+                params["decoder"], caches, segments(cfg)):
+            for j, kind in enumerate(unit):
+                if kind == "xattn":
+                    k, v = jax.vmap(lambda sp: _cross_kv(sp, enc_out, cfg))(
+                        seg_params[f"slot{j}"])
+                    seg_cache[f"slot{j}"]["xk"] = k
+                    seg_cache[f"slot{j}"]["xv"] = v
+    h = final_hidden(params, cfg, x[:, -1:, :])[:, 0, :]
+    return h, caches
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
+                pos: jax.Array):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (position of
+    ``token``). Returns (last_hidden (B, D), new_caches)."""
+    params = cast_params(params, cfg)
+    x = embed_tokens(params, cfg, token)
+    x, new_caches = _run_stack_decode(
+        params["decoder"], segments(cfg), x, caches, cfg, pos=pos)
+    h = final_hidden(params, cfg, x[:, 0, :])
+    return h, new_caches

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: ln -> two D->lru_width projections (x-branch, gate-branch);
+x-branch goes through a causal depthwise conv1d (width 4) then the RG-LRU;
+gate branch is GeLU; elementwise product; project back lru_width -> D.
+
+RG-LRU per channel:
+    r_t = sigmoid(x_t @ W_a + b_a)            recurrence gate
+    i_t = sigmoid(x_t @ W_x + b_x)            input gate
+    a_t = a^(c * r_t),  a = sigmoid(Lambda),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The gates use block-diagonal projections in the paper; we use head-blocked
+dense (n_heads blocks) matching the published structure.
+
+State per layer: conv (B, w-1, lru), h (B, lru) (f32).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+
+_C = 8.0
+_MIN_RAD, _MAX_RAD = 0.9, 0.999
+
+
+def init_rglru_layer(key, cfg: ModelConfig):
+    d, lw = cfg.d_model, cfg.lru_width or cfg.d_model
+    nb = cfg.n_heads                       # gate blocks
+    bw = lw // nb
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    # init a in [0.9, 0.999]: Lambda = logit(a^(1/c))
+    u = jax.random.uniform(ks[5], (lw,), minval=_MIN_RAD ** 2,
+                           maxval=_MAX_RAD ** 2)
+    a = jnp.sqrt(u)
+    lam = jnp.log((a ** (1.0 / _C)) / (1.0 - a ** (1.0 / _C)))
+    return {
+        "ln": jnp.zeros((d,)),
+        "w_x": jax.random.normal(ks[0], (d, lw)) * s,
+        "w_gate_in": jax.random.normal(ks[1], (d, lw)) * s,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv1d_width, lw)) * 0.1,
+        "conv_b": jnp.zeros((lw,)),
+        # block-diagonal gate projections: (nb, bw, bw)
+        "w_a": jax.random.normal(ks[3], (nb, bw, bw)) * (1.0 / math.sqrt(bw)),
+        "b_a": jnp.zeros((lw,)),
+        "w_i": jax.random.normal(ks[4], (nb, bw, bw)) * (1.0 / math.sqrt(bw)),
+        "b_i": jnp.zeros((lw,)),
+        "lam": lam,
+        "w_out": jax.random.normal(jax.random.fold_in(key, 7), (lw, d)) *
+                 (1.0 / math.sqrt(lw)),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    lw = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, lw), dtype),
+        "h": jnp.zeros((batch, lw), jnp.float32),
+    }
+
+
+def _block_proj(x, w, b):
+    """Block-diagonal projection. x: (..., nb*bw); w: (nb, bw, bw)."""
+    nb, bw, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bw)
+    y = jnp.einsum("...nb,nbc->...nc", xs, w.astype(x.dtype))
+    return y.reshape(*x.shape) + b.astype(x.dtype)
+
+
+def _causal_conv1d(x, state_conv, w, b):
+    """Depthwise causal conv. x: (B,T,C); state: (B,w-1,C); w: (w,C)."""
+    width = w.shape[0]
+    full = jnp.concatenate([state_conv.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    T = x.shape[1]
+    for i in range(width):
+        out = out + full[:, i:i + T] * w[width - 1 - i][None, None].astype(x.dtype)
+    new_state = full[:, -(width - 1):].astype(state_conv.dtype) \
+        if width > 1 else state_conv
+    return out + b.astype(x.dtype), new_state
+
+
+def rglru_scan(x, h0, a_t, i_t):
+    """h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t), scanned over T.
+
+    x, a_t, i_t: (B, T, C) f32; h0: (B, C) f32.
+    """
+    gated = jnp.sqrt(jnp.clip(1.0 - a_t * a_t, 0.0)) * (i_t * x)
+
+    def step(h, inp):
+        a, g = inp
+        h = a * h + g
+        return h, h
+
+    xs = (jnp.moveaxis(a_t, 1, 0), jnp.moveaxis(gated, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def rglru_block(p, x, cfg: ModelConfig, state):
+    """The Griffin recurrent block (used in place of attention).
+
+    x: (B, T, D) -> (y, new_state). T=1 works for decode.
+    """
+    dt = x.dtype
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(xn @ p["w_gate_in"].astype(dt))
+    xb = xn @ p["w_x"].astype(dt)
+    xb, conv_state = _causal_conv1d(xb, state["conv"], p["conv_w"],
+                                    p["conv_b"])
+    xb32 = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_proj(xb32, p["w_a"].astype(jnp.float32), p["b_a"]))
+    i = jax.nn.sigmoid(_block_proj(xb32, p["w_i"].astype(jnp.float32), p["b_i"]))
+    log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    hs, h_last = rglru_scan(xb32, state["h"], a, i)
+    y = (hs.astype(dt) * gate) @ p["w_out"].astype(dt)
+    return x + y, {"conv": conv_state, "h": h_last}

@@ -1,0 +1,139 @@
+"""Optimizers and schedules (self-contained; no optax dependency).
+
+AdamW with:
+  - global-norm gradient clipping
+  - optional Adafactor-style factored second moment (O(n) -> O(sqrt n)
+    state for matrices) — a distributed-memory trick for 100B+ models
+  - optional reduced-precision (bf16) first/second moments with
+    stochastic-rounding-free error compensation kept in the update
+  - warmup + cosine schedule
+
+State layout mirrors the param pytree so the same PartitionSpecs shard it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    factored: bool = False          # Adafactor-style factored 2nd moment
+    state_dtype: str = "float32"    # 'float32' | 'bfloat16' moments
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1.0, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def init_state(cfg: AdamWConfig, params):
+    """Optimizer state pytree: {'m', 'v' or ('vr','vc'), 'step'}."""
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def mk_m(p):
+        return jnp.zeros(p.shape, sdt)
+
+    def mk_v(p):
+        if cfg.factored and _factorable(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros(p.shape, sdt)
+
+    return {
+        "m": jax.tree.map(mk_m, params),
+        "v": jax.tree.map(mk_v, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _second_moment_update(cfg: AdamWConfig, v, g2):
+    if isinstance(v, dict):  # factored
+        vr = cfg.b2 * v["vr"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+        vc = cfg.b2 * v["vc"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+        return {"vr": vr, "vc": vc}
+    return (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g2).astype(v.dtype)
+
+
+def _second_moment_value(v):
+    if isinstance(v, dict):  # reconstruct rank-1 estimate
+        vr, vc = v["vr"], v["vc"]
+        denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+        return vr[..., None] * vc[..., None, :] / denom[..., None]
+    return v.astype(jnp.float32)
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_p = tdef.flatten_up_to(params)
+
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        g32 = g.astype(jnp.float32)
+        m2 = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32)
+        v2 = _second_moment_update(cfg, v, g32 * g32)
+        mhat = m2 / b1c
+        vhat = _second_moment_value(v2) / b2c
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # decay matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m2.astype(m.dtype))
+        new_v.append(v2)
+
+    new_state = {
+        "m": jax.tree.unflatten(tdef, new_m),
+        "v": jax.tree.unflatten(tdef, new_v),
+        "step": step,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return jax.tree.unflatten(tdef, new_p), new_state, metrics

@@ -1,0 +1,62 @@
+"""Sharding-constraint helpers usable from inside model code.
+
+GSPMD propagation sometimes picks pathological shardings (measured in the
+§Perf log: f32 score partials all-reduced when head counts don't divide
+TP; decode KV caches all-gathered instead of the partial-softmax
+pattern). These helpers pin intermediates to the intended shardings.
+
+All helpers no-op when there is no ambient mesh (single-device tests) and
+silently drop any axis that does not divide the dimension.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import env
+
+
+def _mesh_axis_size(mesh, ax):
+    if isinstance(ax, tuple):
+        return math.prod(mesh.shape[a] for a in ax)
+    return mesh.shape[ax]
+
+
+def batch_axes_for(mesh, b: int):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while axes:
+        if b % math.prod(mesh.shape[a] for a in axes) == 0:
+            return tuple(axes)
+        axes.pop(0)
+    return None
+
+
+def constrain(x, *axis_per_dim):
+    """with_sharding_constraint(x, P(*axis_per_dim)) on the ambient mesh.
+
+    axis names that are absent from the mesh or do not divide the
+    corresponding dim are dropped. 'batch' is a placeholder resolved to
+    the ('pod','data') prefix that divides x.shape[dim].
+    """
+    mesh = env.current_mesh()
+    if mesh is None:
+        return x
+    assert len(axis_per_dim) == x.ndim, (axis_per_dim, x.shape)
+    fixed = []
+    for dim, ax in zip(x.shape, axis_per_dim):
+        if ax == "batch":
+            ax = batch_axes_for(mesh, dim)
+        if ax is None:
+            fixed.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        if not all(n in mesh.axis_names for n in names):
+            fixed.append(None)
+            continue
+        size = _mesh_axis_size(mesh, ax)
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

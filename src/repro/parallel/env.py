@@ -1,0 +1,31 @@
+"""Ambient parallel context: the mesh visible to model internals.
+
+Model code is pure-functional; the only thing layer internals ever need
+from the distribution layer is the mesh (for shard_map-based executors
+like the EP MoE). Step builders set it around lowering; tests set it
+explicitly; when unset, shard_map paths are unavailable and executors
+fall back to pjit-friendly formulations.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_mesh",
+                                                       default=None)
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)

@@ -1,0 +1,84 @@
+"""GPipe-style pipeline parallelism prototype (shard_map + ppermute).
+
+Not enabled for the assigned meshes (DP x TP fills 256 chips/pod and
+depth-wise scan + remat bounds memory — DESIGN.md §4), but provided and
+tested for deployments where layers/chip memory forces stage splitting.
+
+Schedule: classic GPipe fill-drain over M microbatches and P stages laid
+out on a 'pipe' mesh axis. Stage s holds layers [s*L/P, (s+1)*L/P); the
+activation ring rotates via collective_permute. Bubble fraction is the
+textbook (P-1)/(M+P-1).
+
+``pipeline_apply(fn_stage, params_stacked, x, mesh)``:
+  fn_stage(stage_params, x) -> x, applied P times in sequence overall.
+Each device holds ONLY its stage's params (leading axis sharded on
+'pipe'), so the memory win is real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(fn_stage, stage_params, x, mesh, *, n_microbatches: int,
+                   axis: str = "pipe"):
+    """x: (B, ...) global batch; stage_params leaves: (P, ...) sharded on
+    ``axis``. Returns fn_{P-1}(...fn_0(x)) computed pipelined."""
+    n_stages = mesh.shape[axis]
+    B = x.shape[0]
+    assert B % n_microbatches == 0, (B, n_microbatches)
+    mb = B // n_microbatches
+
+    def local_fn(params_local, x_local):
+        # params_local: (1, ...) this device's stage; x_local: full batch
+        # replicated (prototype keeps data replicated over 'pipe').
+        sp = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        micro = x_local.reshape(n_microbatches, mb, *x_local.shape[1:])
+
+        n_ticks = n_microbatches + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            buf, out = carry
+            # which microbatch enters stage 0 at tick t
+            feed = jnp.where(t < n_microbatches, t, 0)
+            incoming = jnp.where(
+                stage == 0,
+                micro[feed],
+                buf,
+            )
+            active = (t - stage >= 0) & (t - stage < n_microbatches)
+            y = fn_stage(sp, incoming)
+            y = jnp.where(active, y, incoming)
+            # the last stage writes its finished microbatch to the output
+            done_idx = t - (n_stages - 1)
+            out = jnp.where(
+                (stage == n_stages - 1) & active,
+                out.at[jnp.clip(done_idx, 0, n_microbatches - 1)].set(y),
+                out,
+            )
+            # rotate activations to the next stage
+            buf = jax.lax.ppermute(y, axis, perm)
+            return (buf, out), None
+
+        buf0 = jnp.zeros_like(micro[0])
+        out0 = jnp.zeros_like(micro)
+        (buf, out), _ = jax.lax.scan(tick, (buf0, out0),
+                                     jnp.arange(n_ticks))
+        # only the last stage holds the result; broadcast it back
+        out = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out)),
+            axis)
+        return out.reshape(B, *x.shape[1:])
+
+    in_specs = (P(axis), P())     # params staged; batch replicated
+    out_specs = P()
+    return jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(
+        stage_params, x)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

@@ -1,0 +1,236 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Mesh axes (DESIGN.md §4):
+  'pod'   data parallelism across pods (DCN); nothing else uses it
+  'data'  in-pod data parallelism + FSDP weight sharding
+  'model' tensor parallelism (Megatron column/row), vocab sharding,
+          expert parallelism, and decode-cache sequence sharding
+
+Rules are name-based on the trailing dict key, with extra leading ``None``
+axes for the layer-stack dimension added automatically (params under a
+scanned segment have one leading stack axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# trailing-rank base specs, keyed by param leaf name
+_COL = ("data", "model")     # column-parallel: (in=FSDP, out=TP)
+_ROW = ("model", "data")     # row-parallel
+_PARAM_RULES = {
+    # embeddings / head
+    "embed": (2, ("model", "data")),       # (V, D): vocab-sharded
+    "lm_head": (2, ("data", "model")),     # (D, V)
+    # attention
+    "wq": (2, _COL), "wk": (2, _COL), "wv": (2, _COL), "wo": (2, _ROW),
+    # dense MLP (+ shared expert)
+    "w_gate": (2, _COL), "w_up": (2, _COL), "w_in": (2, _COL),
+    "w_out": (2, _ROW),
+    # rwkv6
+    "w_r": (2, _COL), "w_k": (2, _COL), "w_v": (2, _COL), "w_g": (2, _COL),
+    "w_o": (2, _ROW),
+    "wA": (2, ("data", None)), "wB": (2, (None, "data")),
+    "w_k_cm": (2, _COL), "w_v_cm": (2, _ROW), "w_r_cm": (2, _COL),
+    # rg-lru
+    "w_x": (2, _COL), "w_gate_in": (2, _COL),
+    "conv_w": (2, (None, "model")),
+    "conv_b": (1, ("model",)), "b_a": (1, ("model",)),
+    "b_i": (1, ("model",)), "lam": (1, ("model",)),
+    "w_a": (3, (None, None, None)), "w_i": (3, (None, None, None)),
+    # moe router
+    "router": (2, ("data", None)),
+}
+# expert-stacked weights (under a 'moe' path): leading expert axis -> EP
+_MOE_RULES = {
+    "w_gate": (3, ("model", "data", None)),
+    "w_up": (3, ("model", "data", None)),
+    "w_out": (3, ("model", None, "data")),
+}
+
+
+def _path_names(path) -> list:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "idx"):
+            out.append(str(e.idx))
+    return out
+
+
+def _axes_in(mesh: Mesh, names):
+    return tuple(n if (n is None or n in mesh.axis_names) else None
+                 for n in names)
+
+
+_ATTN_KEYS = ("wq", "wk", "wv", "wo")
+
+
+def param_specs(params, mesh: Mesh, cfg=None):
+    """PartitionSpec pytree matching ``params``.
+
+    With ``cfg.seq_parallel_attn``, attention weights are replicated over
+    'model' (the attention block parallelizes over the sequence instead —
+    the context-parallel regime for head counts that don't divide TP).
+    """
+    seq_par = bool(cfg is not None and getattr(cfg, "seq_parallel_attn",
+                                               False))
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        key = names[-1]
+        in_moe = "moe" in names and "shared" not in names
+        in_attn = ("attn" in names or "xattn" in names)
+        table = _MOE_RULES if (in_moe and key in _MOE_RULES) else _PARAM_RULES
+        if key in table:
+            base_rank, spec = table[key]
+            if seq_par and in_attn and key in _ATTN_KEYS:
+                spec = (("data", None) if key != "wo" else (None, "data"))
+            spec = _axes_in(mesh, spec)
+            lead = leaf.ndim - base_rank
+            assert lead >= 0, (names, leaf.shape)
+            full = (None,) * lead + tuple(spec)
+        else:
+            full = (None,) * leaf.ndim   # norms, scalars: replicated
+        # drop shardings that do not divide the dim (uneven shardings are
+        # legal in GSPMD but we keep the explicit specs clean)
+        fixed = []
+        for dim, ax in zip(leaf.shape, full):
+            if ax is None:
+                fixed.append(None)
+            else:
+                size = mesh.shape[ax] if not isinstance(ax, tuple) else int(
+                    np.prod([mesh.shape[a] for a in ax]))
+                fixed.append(ax if dim % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def serve_param_specs(params, mesh: Mesh, cfg=None, *,
+                      max_bytes_per_dev: float = 6e9):
+    """Decode-regime weights: replicate over 'data' when they fit.
+
+    FSDP weight sharding is a TRAINING memory optimization; at decode it
+    costs a per-layer all-gather on the latency path. When bf16 weights /
+    TP fit the per-device budget, serve with weights sharded over 'model'
+    only (zero per-step weight collectives). Falls back to the training
+    specs for models too big for that (nemotron-340b).
+    """
+    specs = param_specs(params, mesh, cfg)
+    tp = mesh.shape.get("model", 1)
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    if total * 2 / tp > max_bytes_per_dev:
+        return specs
+
+    def strip_data(ps):
+        fixed = tuple(None if a in ("data", "pod") or (
+            isinstance(a, tuple) and any(x in ("data", "pod") for x in a))
+            else a for a in tuple(ps))
+        return P(*fixed)
+
+    return jax.tree.map(strip_data, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh, global_batch: int):
+    """Largest prefix of ('pod','data') whose product divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while axes:
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if global_batch % size == 0:
+            return tuple(axes)
+        axes.pop(0)
+    return ()
+
+
+def batch_specs(batch, mesh: Mesh, global_batch: int):
+    ba = batch_axes(mesh, global_batch)
+    bspec = ba if ba else None
+
+    def rule(path, leaf):
+        return P(bspec, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+_CACHE_BASE = {
+    # key -> (base_rank, spec builder given (bspec, model_ax) over base dims)
+    "k": (4, lambda b, m: (b, m, None, None)),      # (B, S, Hkv, hd): seq
+    "v": (4, lambda b, m: (b, m, None, None)),
+    "xk": (4, lambda b, m: (b, m, None, None)),
+    "xv": (4, lambda b, m: (b, m, None, None)),
+    "wkv": (4, lambda b, m: (b, m, None, None)),    # (B, H, hdk, hdv): heads
+    "shift1": (2, lambda b, m: (b, None)),
+    "shift2": (2, lambda b, m: (b, None)),
+    "conv": (3, lambda b, m: (b, None, m)),         # (B, w-1, lru)
+    "h": (2, lambda b, m: (b, m)),                  # (B, lru)
+}
+_CACHE_SHARD_DIM = {"k": 1, "v": 1, "xk": 1, "xv": 1, "wkv": 1, "conv": 2,
+                    "h": 1}
+
+
+def cache_specs(cache, mesh: Mesh, global_batch: int):
+    """Decode-cache specs: batch on data axes; KV sequence / recurrent
+    channels on 'model' (kv-head counts never divide TP=16; DESIGN §4).
+
+    Works for stacked (leading layer axis) and per-layer (slice) caches.
+    """
+    ba = batch_axes(mesh, global_batch)
+    bspec = ba if ba else None
+    model = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape[model] if model else 1
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        key = names[-1]
+        if key not in _CACHE_BASE:
+            return P(*([None] * leaf.ndim))
+        base_rank, build = _CACHE_BASE[key]
+        lead = leaf.ndim - base_rank
+        m = model
+        if key in _CACHE_SHARD_DIM and m is not None:
+            dim = leaf.shape[lead + _CACHE_SHARD_DIM[key]]
+            if dim % msize != 0:
+                m = None
+        return P(*((None,) * lead + build(bspec, m)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def opt_state_specs(opt_state, pspecs):
+    """Optimizer state mirrors param sharding; factored moments drop the
+    reduced axis; step is replicated."""
+
+    def v_spec(ps: P, leaf_shape, kind: str):
+        if kind == "vr":   # mean over last axis
+            return P(*ps[:-1])
+        if kind == "vc":   # mean over second-to-last axis
+            return P(*ps[:-2], ps[-1])
+        return ps
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        if names and names[0] == "step":
+            return P()
+        kind = names[-1] if names[-1] in ("vr", "vc") else None
+        # strip the leading 'm'/'v' container and optional trailing vr/vc
+        inner = names[1:-1] if kind else names[1:]
+        node = pspecs
+        for n in inner:
+            node = node[int(n)] if isinstance(node, (list, tuple)) else node[n]
+        ps = node
+        return v_spec(ps, leaf.shape, kind) if kind else ps
+
+    return jax.tree_util.tree_map_with_path(rule, opt_state)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

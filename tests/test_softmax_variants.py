@@ -1,0 +1,161 @@
+"""The paper's core claim (Theorem 1) + every baseline softmax unit.
+
+Covers: exactness of the reduced unit against all hardware-softmax
+baselines, Table I's three input regimes, monotonicity (Figs 2/3), and
+hypothesis property tests over random vectors / shifts / scales.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    PREDICT_FNS,
+    base2_exp,
+    base2_softmax_unit,
+    cordic_exp,
+    inverse_softmax_unit,
+    predict_inverse_softmax,
+    reduced_softmax_predict,
+    softmax_unit,
+    unit_op_counts,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: argmax(x) == argmax(softmax(x)), all regimes of Table I
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("lo,hi", [(-100.0, 0.0), (0.0, 100.0), (-1.0, 1.0)])
+def test_table1_regimes(lo, hi):
+    """Table I: all-negative, all-positive, and small random inputs."""
+    x = jax.random.uniform(KEY, (64, 10), minval=lo, maxval=hi)
+    s = softmax_unit(x)
+    # softmax is a valid distribution
+    np.testing.assert_allclose(jnp.sum(s, -1), 1.0, rtol=1e-5)
+    # the comparator output equals the softmax classification
+    np.testing.assert_array_equal(
+        reduced_softmax_predict(x), jnp.argmax(s, -1))
+
+
+@pytest.mark.parametrize("name", sorted(PREDICT_FNS))
+def test_all_units_agree_with_reduced(name):
+    """Every hardware softmax unit classifies identically to argmax."""
+    for i, scale in enumerate([0.1, 1.0, 10.0, 80.0]):
+        x = jax.random.normal(jax.random.fold_in(KEY, i), (128, 50)) * scale
+        got = PREDICT_FNS[name](x)
+        np.testing.assert_array_equal(got, reduced_softmax_predict(x),
+                                      err_msg=f"{name} scale={scale}")
+
+
+def test_monotonicity_fig23():
+    """Figs 2/3: exp and softmax preserve input ordering."""
+    x = jnp.sort(jax.random.uniform(KEY, (10,), minval=-1, maxval=1))
+    e = jnp.exp(x)
+    s = softmax_unit(x)
+    assert bool(jnp.all(jnp.diff(e) >= 0))
+    assert bool(jnp.all(jnp.diff(s) >= 0))
+    x10 = jnp.sort(jax.random.uniform(KEY, (10,), minval=-10, maxval=10))
+    assert bool(jnp.all(jnp.diff(softmax_unit(x10)) >= 0))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests
+# ---------------------------------------------------------------------------
+finite_vec = st.lists(
+    st.floats(min_value=-80, max_value=80, allow_nan=False,
+              allow_infinity=False, width=32),
+    min_size=2, max_size=64)
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_vec)
+def test_theorem1_property(vals):
+    """Finite-precision form of Theorem 1 (found by hypothesis, recorded in
+    DESIGN.md §2): softmax can LOSE resolution the raw logits have (e.g.
+    x = [-2.8e-36, 0.0] -> softmax = [0.5, 0.5] exactly), so the correct
+    invariant is: the reduced unit's pick always attains the maximal
+    softmax probability (it refines softmax ties, never disagrees)."""
+    x = jnp.asarray(vals, jnp.float32)
+    s = softmax_unit(x)
+    red = int(reduced_softmax_predict(x))
+    assert float(s[red]) == float(jnp.max(s))
+    # and where softmax itself distinguishes, they agree exactly
+    if int(jnp.sum(s == jnp.max(s))) == 1:
+        assert red == int(jnp.argmax(s))
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite_vec, st.floats(min_value=-50, max_value=50,
+                             allow_nan=False, width=32),
+       st.floats(min_value=0.015625, max_value=10, allow_nan=False,
+                 width=32))
+def test_invariance_shift_scale(vals, shift, scale):
+    """argmax is invariant to shift / positive scale — up to float
+    absorption (third hypothesis finding: x=[-2.2e-16, 0] + 1.0 rounds
+    both lanes to exactly 1.0, collapsing the order to a tie). The
+    correct invariant: the original pick still ATTAINS the max after the
+    transform."""
+    x = jnp.asarray(vals, jnp.float32)
+    pick = int(reduced_softmax_predict(x))
+    for y in (x + shift, x * scale):
+        assert float(y[pick]) == float(jnp.max(y)), (vals, shift, scale)
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite_vec)
+def test_inverse_softmax_is_reciprocal(vals):
+    """Eq (3): s'(x) = 1 / s(x), argmin(s') == argmax(s).
+
+    Range caveat (found by hypothesis): s'(x_j) = tot * e^(m - x_j)
+    overflows f32 once the logit spread exceeds ~88 — but only at
+    NON-winning classes (the winner's value is tot <= k), so the argmin
+    decision survives any spread; the reciprocal identity is asserted
+    within the representable range, mirroring a fixed-point unit's domain.
+    """
+    x = jnp.asarray(vals, jnp.float32)[None]
+    s = softmax_unit(x)
+    inv = inverse_softmax_unit(x)
+    pick = int(predict_inverse_softmax(x)[0])
+    assert float(s[0, pick]) == float(jnp.max(s))
+    if float(jnp.max(x) - jnp.min(x)) < 80.0:
+        np.testing.assert_allclose(np.asarray(s * inv), 1.0, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Approximation quality of the baselines (they're approximate; ours exact)
+# ---------------------------------------------------------------------------
+def test_cordic_exp_accuracy():
+    xs = jnp.linspace(-30, 30, 201)
+    rel = jnp.abs(cordic_exp(xs) - jnp.exp(xs)) / jnp.exp(xs)
+    assert float(jnp.max(rel)) < 1e-5
+
+
+@pytest.mark.parametrize("bits,tol", [(4, 0.05), (8, 0.004), (12, 3e-4)])
+def test_base2_lut_precision_scaling(bits, tol):
+    """[3]'s precision parameter P: error shrinks ~2x per bit."""
+    xs = jnp.linspace(-10, 10, 101)
+    rel = jnp.abs(base2_exp(xs, bits) - jnp.exp(xs)) / jnp.exp(xs)
+    assert float(jnp.max(rel)) < tol
+
+
+def test_base2_softmax_sums_to_one():
+    x = jax.random.normal(KEY, (8, 100)) * 5
+    s = base2_softmax_unit(x, precision_bits=8)
+    np.testing.assert_allclose(np.asarray(jnp.sum(s, -1)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The paper's circuit-cost claim, in op counts
+# ---------------------------------------------------------------------------
+def test_reduced_unit_op_counts():
+    for k in (10, 1000, 151936):
+        ops = unit_op_counts(k)
+        red = ops["reduced (ours)"]
+        assert red["exp"] == red["div"] == red["lut"] == 0
+        assert red["cmp"] == k - 1
+        soft = ops["softmax"]
+        assert soft["exp"] == k and soft["div"] == k
