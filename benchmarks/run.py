@@ -6,6 +6,10 @@ Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
   bench_head_units    unit cost vs class count k (the paper's size claim)
   bench_kernels       fused reduced head vs unfused pipeline
   roofline            summary of the dry-run roofline artifacts (if present)
+
+``bench_serve`` (engine tokens/sec, reduced vs softmax head over the
+paged-KV engine) is intentionally not in the default sweep — it takes a
+few minutes; run it directly: python benchmarks/bench_serve.py
 """
 import sys
 import traceback

@@ -1,8 +1,10 @@
-"""Serving demo: continuous batching with the Reduced Softmax head.
+"""Serving demo: continuous batching + paged KV with the Reduced head.
 
-Shows the engine admitting a mixed queue of requests into a fixed set of
-decode slots, freeing slots on completion, and (the paper's point) that
-greedy serving never computes a softmax.
+Shows the engine admitting a mixed queue of greedy and top-k requests
+into a fixed set of decode slots over a block-paged KV pool, freeing
+blocks on completion, and (the paper's point) that greedy serving never
+computes a softmax: every greedy step is the fused comparator, and the
+top-k requests only ever exp/normalize k values instead of the vocab.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -20,24 +22,30 @@ def main():
     cfg = smoke_config(ARCHS["qwen3-0.6b"])
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(params, cfg, n_slots=4, max_len=96, eos_id=1,
-                      head_mode="reduced")
+                      head_mode="reduced", kv_layout="paged", block_size=16)
 
     rng = np.random.default_rng(0)
     n_req = 12
     for rid in range(n_req):
         plen = int(rng.integers(4, 24))
+        topk = 4 if rid % 3 == 0 else 1   # every 3rd request samples top-4
         eng.submit(Request(rid, rng.integers(0, cfg.vocab_size, plen)
                            .astype(np.int32),
-                           max_new_tokens=int(rng.integers(4, 12))))
+                           max_new_tokens=int(rng.integers(4, 12)),
+                           top_k=topk, temperature=0.8))
     t0 = time.perf_counter()
     stats = eng.run()
     dt = time.perf_counter() - t0
+    alloc = eng.store.allocator
     print(f"served {n_req} requests in {dt:.2f}s with {eng.n_slots} slots")
     print(f"stats: {stats}")
+    print(f"paged KV pool: {alloc.num_blocks} blocks x "
+          f"{eng.store.block_size} tokens, {alloc.n_free} free at exit")
     tput = stats["decode_steps"] / dt
     print(f"engine decode steps/s: {tput:.1f} "
           f"(head unit: argmax only — zero exp/div, Theorem 1)")
     assert stats["completed"] == n_req
+    assert alloc.n_free == alloc.num_blocks  # every block returned
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Fast regression gate: the engine-critical test slice plus a live serve
+# smoke. Catches serving regressions in ~1 minute instead of the full
+# tier-1 suite (~4 min). Full gate: PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== engine-critical tests =="
+python -m pytest -x -q \
+    tests/test_serve_paged.py \
+    tests/test_substrate.py::test_serve_engine_continuous_batching \
+    tests/test_substrate.py::test_serve_reduced_equals_softmax_generations
+
+echo "== serve smoke (paged KV, reduced head, mixed greedy/top-k) =="
+timeout 120 python examples/serve_demo.py
+
+echo "SMOKE OK"

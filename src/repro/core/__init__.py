@@ -3,8 +3,11 @@ from repro.core.reduced_softmax import (
     argmax_with_value,
     distributed_argmax,
     fused_reduced_head,
+    fused_reduced_topk,
     reduced_softmax_predict,
+    reduced_topk,
     sharded_reduced_head,
+    topk_sample,
     unit_op_counts,
 )
 from repro.core.softmax_variants import (

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 # ---------------------------------------------------------------------------
 # 1. The reduced unit itself (paper, Fig. 4)
@@ -43,6 +45,63 @@ def argmax_with_value(x: jax.Array, axis: int = -1):
     idx = jnp.argmax(x, axis=axis)
     val = jnp.max(x, axis=axis)
     return idx, val
+
+
+def reduced_topk(x: jax.Array, k: int):
+    """The k-winner comparator: top-k (vals, idxs) over the last axis.
+
+    Still zero exp / zero sum / zero divide — a selection network of
+    comparators (k passes of the k=1 unit with winner masking).  For k=1
+    this IS ``reduced_softmax_predict`` + the max value.  Ties resolve to
+    the lowest index, values sorted descending.
+    """
+    from repro.kernels import ref
+
+    return ref.topk_select(x, k)
+
+
+def topk_sample(vals: jax.Array, idxs: jax.Array, key,
+                temperature: float = 1.0) -> jax.Array:
+    """Sample a vocab id from the k comparator survivors (jit-friendly).
+
+    THIS is where the reduced unit pays for sampling workloads: the
+    softmax runs over k values (k ~ 4..64), not the vocab — O(k) exp/sum
+    instead of O(V).  vals/idxs: (B, k) from ``reduced_topk`` or the fused
+    kernel; temperature <= 0 degenerates to greedy (= the k=1 comparator).
+    The serving engine applies the same math host-side per request
+    (``ServeEngine._pick``) for per-request numpy-RNG reproducibility.
+    """
+    if temperature <= 0.0:
+        return idxs[:, 0].astype(jnp.int32)
+    # categorical over the k logits IS the softmax(vals/T) sample
+    choice = jax.random.categorical(
+        key, vals.astype(jnp.float32) / temperature, axis=-1)  # (B,)
+    return jnp.take_along_axis(idxs, choice[:, None], axis=-1)[:, 0].astype(
+        jnp.int32)
+
+
+def fused_reduced_topk(
+    h: jax.Array,
+    w: jax.Array,
+    k: int,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    block_v: int = 512,
+    block_k: int = 512,
+    block_b: int = 128,
+):
+    """Top-k of ``h @ w`` over the vocab without materializing logits.
+
+    Returns (vals (B, k) f32, idxs (B, k) i32), descending, lowest index
+    first among ties — the batched comparator bus the serving engine feeds
+    into ``topk_sample``.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.fused_topk_head(
+        h, w, k, use_pallas=use_pallas, interpret=interpret,
+        block_v=block_v, block_k=block_k, block_b=block_b)
 
 
 # ---------------------------------------------------------------------------
@@ -131,9 +190,8 @@ def distributed_argmax(
         winner, _ = _combine_val_idx(vals, idxs, axis=-1)
         return winner
 
-    return jax.shard_map(
+    return compat.shard_map(
         local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
-        check_vma=False,
     )(logits)
 
 
@@ -174,9 +232,8 @@ def sharded_reduced_head(
         winner, _ = _combine_val_idx(vals, idxs, axis=-1)
         return winner
 
-    return jax.shard_map(
+    return compat.shard_map(
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
-        check_vma=False,
     )(h, w)
 
 

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: batched top-k comparator LM head.
+
+The reduced softmax unit generalised from k=1 (pure argmax comparator) to
+small k: compute the top-k ``(value, index)`` pairs of ``h @ w`` over the
+vocab WITHOUT materializing the ``(B, V)`` logits — a selection network of
+comparators, still zero exp / zero sum / zero divide.  A top-k *sampling*
+head then only needs a softmax over the k surviving values (k ~ 4..64),
+so the expensive exp/normalize work drops from O(V) to O(k).
+
+Tiling mirrors ``fused_argmax_head``:
+
+    grid = (nb, nv, nk)              # k-dim innermost: accumulate h@w
+    h block    (Bt, Kt)              # indexed (b, k)
+    w block    (Kt, Vt)              # indexed (k, v)
+    acc        (Bt, Vt) f32          # scratch, rebuilt per (b, v)
+    run_val    (Bt, K)  f32          # scratch: running top-K values
+    run_idx    (Bt, K)  i32          #   ... and their GLOBAL vocab indices
+    outputs    vals (B, K) f32, idxs (B, K) i32  # written at v == nv-1
+
+Per vocab tile the running list is merged via K selection passes over the
+``(Bt, K + Vt)`` candidate row (running list first).  Selection uses a
+strictly-greater compare and first-position-wins extraction, so ties
+resolve to the LOWEST global index (running entries hold earlier tiles,
+hence smaller indices), matching ``jnp.argmax``/iterative-selection
+semantics exactly.  Vocab padding is masked to -inf with the static true V.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _select_topk(vals, idxs, k: int):
+    """K stable selection passes over the last axis.
+
+    vals (Bt, C) f32, idxs (Bt, C) i32 -> ((Bt, K), (Bt, K)); among equal
+    values the earliest array position wins each pass.
+    """
+    out_v, out_i = [], []
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    for _ in range(k):
+        m = jnp.max(vals, axis=-1, keepdims=True)              # (Bt, 1)
+        hit = vals == m
+        first = jnp.min(jnp.where(hit, pos_iota, jnp.iinfo(jnp.int32).max),
+                        axis=-1, keepdims=True)                # (Bt, 1)
+        sel = pos_iota == first
+        out_v.append(m[:, 0])
+        out_i.append(jnp.sum(jnp.where(sel, idxs, 0), axis=-1))
+        vals = jnp.where(sel, _NEG_INF, vals)
+    return (jnp.stack(out_v, axis=-1), jnp.stack(out_i, axis=-1))
+
+
+def _kernel(h_ref, w_ref, val_ref, idx_ref, acc_ref, rv_ref, ri_ref, *,
+            k_top: int, v_true: int, block_v: int, nv: int, nk: int):
+    v = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(v == 0, kk == 0))
+    def _init_running():
+        rv_ref[...] = jnp.full_like(rv_ref, _NEG_INF)
+        ri_ref[...] = jnp.zeros_like(ri_ref)
+
+    @pl.when(kk == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        h_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == nk - 1)
+    def _merge_tile():
+        tile = acc_ref[...]                                    # (Bt, Vt)
+        col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+        tile = jnp.where(col < v_true, tile, _NEG_INF)
+        # candidates: running list (earlier tiles => smaller global indices)
+        # FIRST so stable selection keeps lowest-index-wins across tiles.
+        cand_v = jnp.concatenate([rv_ref[...], tile], axis=-1)
+        cand_i = jnp.concatenate([ri_ref[...], col], axis=-1)
+        new_v, new_i = _select_topk(cand_v, cand_i, k_top)
+        rv_ref[...] = new_v
+        ri_ref[...] = new_i
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            val_ref[...] = rv_ref[...]
+            idx_ref[...] = ri_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_b", "block_v", "block_k", "interpret"),
+)
+def fused_topk_head(
+    h: jax.Array,
+    w: jax.Array,
+    k: int = 4,
+    *,
+    block_b: int = 128,
+    block_v: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """Top-k of ``h @ w`` over the vocab. Returns (vals (B,k), idxs (B,k)).
+
+    Rows are sorted by descending value; among equal values the lower
+    vocab index comes first. h: (B, D); w: (D, V); requires k <= V.
+    """
+    b_true, d = h.shape
+    d_w, v_true = w.shape
+    assert d == d_w, (h.shape, w.shape)
+    assert 1 <= k <= v_true, (k, v_true)
+
+    bt = min(block_b, max(8, -(-b_true // 8) * 8))
+    vt = min(block_v, max(128, -(-v_true // 128) * 128))
+    kt = min(block_k, max(128, -(-d // 128) * 128))
+
+    pad_b = -b_true % bt
+    pad_v = -v_true % vt
+    pad_k = -d % kt
+    if pad_b or pad_k:
+        h = jnp.pad(h, ((0, pad_b), (0, pad_k)))
+    if pad_k or pad_v:
+        w = jnp.pad(w, ((0, pad_k), (0, pad_v)))
+    b, v = b_true + pad_b, v_true + pad_v
+    nb, nv, nk = b // bt, v // vt, (d + pad_k) // kt
+
+    kern = functools.partial(
+        _kernel, k_top=k, v_true=v_true, block_v=vt, nv=nv, nk=nk
+    )
+    vals, idxs = pl.pallas_call(
+        kern,
+        grid=(nb, nv, nk),
+        in_specs=[
+            pl.BlockSpec((bt, kt), lambda bi, vi, ki: (bi, ki)),
+            pl.BlockSpec((kt, vt), lambda bi, vi, ki: (ki, vi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, k), lambda bi, vi, ki: (bi, 0)),
+            pl.BlockSpec((bt, k), lambda bi, vi, ki: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, vt), jnp.float32),
+            pltpu.VMEM((bt, k), jnp.float32),
+            pltpu.VMEM((bt, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(h, w)
+    return vals[:b_true], idxs[:b_true]

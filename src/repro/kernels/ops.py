@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_argmax_head as _fah
+from repro.kernels import fused_topk_head as _ftk
 from repro.kernels import fused_xent as _fx
 from repro.kernels import online_softmax as _os
 from repro.kernels import ref
@@ -38,6 +39,14 @@ def fused_argmax_head_with_value(h, w, *, use_pallas: bool = False,
         return _fah.fused_argmax_head_with_value(
             h, w, interpret=interpret, **block_kw)
     return ref.fused_argmax_head_with_value(h, w)
+
+
+def fused_topk_head(h, w, k, *, use_pallas: bool = False,
+                    interpret: bool = True, **block_kw):
+    """Top-k (vals, idxs) of h @ w — the reduced unit's k-winner form."""
+    if use_pallas:
+        return _ftk.fused_topk_head(h, w, k, interpret=interpret, **block_kw)
+    return ref.fused_topk_head(h, w, k)
 
 
 def online_softmax(x, *, use_pallas: bool = False, interpret: bool = True,

@@ -28,6 +28,35 @@ def fused_argmax_head_with_value(h: jax.Array, w: jax.Array):
     )
 
 
+def topk_select(x: jax.Array, k: int):
+    """Top-k over the last axis by k stable selection passes.
+
+    Returns (vals (..., k), idxs (..., k)), values descending; among equal
+    values the LOWEST index comes first (matches jnp.argmax tie semantics,
+    which ``lax.top_k`` does not guarantee across backends).
+    """
+    x = x.astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    vals, idxs = [], []
+    for _ in range(k):
+        m = jnp.max(x, axis=-1, keepdims=True)
+        hit = x == m
+        first = jnp.min(
+            jnp.where(hit, iota, jnp.iinfo(jnp.int32).max),
+            axis=-1, keepdims=True)
+        sel = iota == first
+        vals.append(m[..., 0])
+        idxs.append(jnp.sum(jnp.where(sel, iota, 0), axis=-1))
+        x = jnp.where(sel, -jnp.inf, x)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def fused_topk_head(h: jax.Array, w: jax.Array, k: int):
+    """Top-k of h @ w over the vocab. (vals (B,k) f32, idxs (B,k) i32)."""
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    return topk_select(logits, k)
+
+
 # ---------------------------------------------------------------------------
 # online_softmax: the full softmax unit (numerically-stable), unit-level
 # ---------------------------------------------------------------------------

@@ -142,7 +142,9 @@ ZERO = RooflineTerms(0.0, 0.0, 0.0, {})
 
 
 def cost_terms(compiled) -> RooflineTerms:
-    ca = compiled.cost_analysis() or {}
+    from repro import compat
+
+    ca = compat.cost_analysis(compiled)
     txt = compiled.as_text()
     cb = collective_bytes(txt)
     return RooflineTerms(

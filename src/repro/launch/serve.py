@@ -1,7 +1,16 @@
 """Serving driver: run the continuous-batching engine from the CLI.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --requests 8 --slots 4 [--head-mode reduced|softmax]
+      --requests 8 --slots 4 [--head-mode reduced|softmax|fused|sharded] \
+      [--kv-layout paged|dense] [--top-k 4 --temperature 0.8]
+
+``--head-mode sharded`` builds a (1, n_devices) host mesh and runs every
+decode step's head through ``sharded_reduced_head``: the lm_head weight is
+vocab-sharded over 'model', each shard runs the fused comparator on its
+vocab slice, and only one (val, idx) pair per row per shard crosses the
+wire — the multi-chip form of the paper's reduced unit.  Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise it on
+a CPU host.
 """
 from __future__ import annotations
 
@@ -12,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.launch import mesh as mesh_mod
 from repro.models import lm
 from repro.serve.engine import Request, ServeEngine
 
@@ -25,7 +35,16 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--head-mode", default="reduced",
-                    choices=["reduced", "softmax", "fused"])
+                    choices=["reduced", "softmax", "fused", "sharded"])
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "dense"])
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: n_slots * "
+                         "ceil(max_len/block_size); smaller overcommits)")
+    ap.add_argument("--top-k", type=int, default=1,
+                    help=">1: top-k sampling via the k-winner comparator")
+    ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -33,19 +52,28 @@ def main():
     if args.smoke:
         cfg = smoke_config(cfg)
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    mesh = None
+    if args.head_mode == "sharded":
+        # vocab-sharded head: all devices on 'model'; engine cohorts have
+        # ragged batch sizes, so the batch stays replicated.
+        mesh = mesh_mod.make_host_mesh(model=len(jax.devices()))
     eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                      eos_id=1, head_mode=args.head_mode)
+                      eos_id=1, head_mode=args.head_mode,
+                      kv_layout=args.kv_layout, block_size=args.block_size,
+                      num_blocks=args.num_blocks, mesh=mesh, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, 24))
         eng.submit(Request(
             rid, rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new, top_k=args.top_k,
+            temperature=args.temperature))
     t0 = time.perf_counter()
     stats = eng.run()
     dt = time.perf_counter() - t0
-    print(f"head_mode={args.head_mode} served={stats['completed']} "
-          f"decode_steps={stats['decode_steps']} wall={dt:.2f}s")
+    print(f"head_mode={args.head_mode} kv={args.kv_layout} "
+          f"served={stats['completed']} decode_steps={stats['decode_steps']} "
+          f"preempt={stats['preemptions']} wall={dt:.2f}s")
 
 
 if __name__ == "__main__":

@@ -59,21 +59,59 @@ def train_loss(params, cfg: ModelConfig, batch: dict) -> jax.Array:
 # ---------------------------------------------------------------------------
 def _head_predict(params, cfg: ModelConfig, h: jax.Array,
                   head_mode: str) -> jax.Array:
-    """h: (B, D) -> (B,) int32 predicted next token."""
+    """h: (B, D) -> (B,) int32 predicted next token.
+
+    Every greedy mode except the 'softmax' baseline goes through the
+    fused comparator (``fused_argmax_head_with_value``): the (B, V)
+    logits are never materialized as an output — XLA fuses the ref path,
+    the Pallas kernel keeps them in VMEM tiles on TPU.
+    """
+    from repro.kernels import ops as kernel_ops
+
     w = lm.lm_head_weight(params, cfg).astype(cdtype(cfg))
-    if head_mode == "fused":
-        return reduced_softmax.fused_reduced_head(
-            h, w, use_pallas=cfg.use_pallas)
+    if head_mode in ("reduced", "fused"):
+        # The paper's unit: comparator only — fused with the head matmul.
+        use_pallas = cfg.use_pallas or head_mode == "fused"
+        idx, _ = kernel_ops.fused_argmax_head_with_value(
+            h, w, use_pallas=use_pallas,
+            interpret=jax.default_backend() != "tpu")
+        return idx.astype(jnp.int32)
+    if head_mode == "sharded":
+        # Vocab-sharded head: per-shard fused argmax + tiny (val, idx)
+        # combine. Batch replicated (engine cohorts have ragged B).
+        from repro.parallel import env
+
+        mesh = env.current_mesh()
+        if mesh is None:
+            raise ValueError("head_mode='sharded' needs env.use_mesh(mesh)")
+        return reduced_softmax.sharded_reduced_head(
+            h, w, mesh, data_axes=(), use_pallas=cfg.use_pallas).astype(
+            jnp.int32)
     logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
     if head_mode == "softmax":
         # Baseline unit: exp + normalize + divide, THEN compare.
         probs = jax.nn.softmax(logits, axis=-1)
         return jnp.argmax(probs, axis=-1).astype(jnp.int32)
-    if head_mode == "reduced":
-        # The paper's unit: comparator only.
-        return reduced_softmax.reduced_softmax_predict(logits).astype(
-            jnp.int32)
     raise ValueError(head_mode)
+
+
+def _head_topk(params, cfg: ModelConfig, h: jax.Array, k: int,
+               head_mode: str = "reduced"):
+    """h: (B, D) -> (vals (B, k) f32, idxs (B, k) i32), logits unmaterialized.
+
+    The k-winner comparator bus: the caller samples from these k values
+    with an O(k) softmax instead of an O(V) one (``core.topk_sample`` in
+    jit, or the engine's host-side equivalent).  head_mode='fused' forces
+    the Pallas kernel, mirroring ``_head_predict``; the 'softmax' and
+    'sharded' units have no top-k form — rejected rather than silently
+    substituting the comparator (which would fake a baseline comparison).
+    """
+    if head_mode not in ("reduced", "fused"):
+        raise ValueError(f"no top-k form for head_mode={head_mode!r}")
+    w = lm.lm_head_weight(params, cfg).astype(cdtype(cfg))
+    return reduced_softmax.fused_reduced_topk(
+        h, w, k, use_pallas=cfg.use_pallas or head_mode == "fused",
+        interpret=jax.default_backend() != "tpu")
 
 
 def serve_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
@@ -88,6 +126,20 @@ def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
     """One token step: returns (next_token (B,), new_cache)."""
     h, new_cache = lm.decode_step(params, cfg, token, cache, pos)
     return _head_predict(params, cfg, h, head_mode), new_cache
+
+
+def serve_topk_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
+                       k: int, head_mode: str = "reduced"):
+    """Prompt pass, k-winner head: ((vals (B,k), idxs (B,k)), cache)."""
+    h, cache = lm.prefill(params, cfg, batch, max_len)
+    return _head_topk(params, cfg, h, k, head_mode), cache
+
+
+def serve_topk_decode(params, cfg: ModelConfig, token: jax.Array, cache,
+                      pos: jax.Array, k: int, head_mode: str = "reduced"):
+    """One token step, k-winner head: ((vals, idxs), new_cache)."""
+    h, new_cache = lm.decode_step(params, cfg, token, cache, pos)
+    return _head_topk(params, cfg, h, k, head_mode), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.parallel import env
 
 
@@ -116,12 +117,11 @@ def moe_ep(p, x: jax.Array, cfg, *, mesh=None):
         return y.reshape(b_l, t_l, d), aux
 
     all_axes = set(mesh.axis_names)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(x_spec, router_spec, w_col, w_col,
                   P("model", None, None)),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )
     y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_out"])
     if spec.shared_expert:

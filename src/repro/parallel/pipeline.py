@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(fn_stage, stage_params, x, mesh, *, n_microbatches: int,
                    axis: str = "pipe"):
@@ -75,8 +77,8 @@ def pipeline_apply(fn_stage, stage_params, x, mesh, *, n_microbatches: int,
 
     in_specs = (P(axis), P())     # params staged; batch replicated
     out_specs = P()
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(
+    return compat.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)(
         stage_params, x)
 
 

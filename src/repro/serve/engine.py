@@ -1,29 +1,117 @@
-"""Serving engine: slot-based continuous batching around the reduced head.
+"""Serving engine: continuous batching over a paged KV cache, with the
+reduced softmax unit as the decode head.
 
 The inference-accelerator story of the paper, at engine level:
-  - fixed B decode slots over a shared KV cache;
-  - new requests prefill into a free slot (prompt-at-a-time), decode steps
-    run all active slots together;
-  - greedy sampling IS the reduced softmax unit (argmax on logits —
-    identical output to softmax+argmax by Theorem 1, no exp/sum/divide);
-  - slots free on EOS or max_tokens and are refilled from the queue
-    (continuous batching).
 
-Single-host reference implementation with the same step functions the
-pjit path lowers; the multi-chip serve path shares api.serve_* exactly.
+  - fixed B decode slots over a SHARED, BLOCK-PAGED KV pool (block table
+    per slot, free-list allocator — see serve/paged_kv.py); slots free
+    their blocks on EOS/max_tokens and are refilled from the queue;
+  - a scheduler interleaves prefill and decode: each iteration admits up
+    to ``prefill_per_step`` queued requests into free slots (subject to
+    block availability; an exhausted pool defers admission or preempts
+    the youngest slot back to the queue), then runs one decode step per
+    position-cohort of active slots;
+  - greedy sampling IS the reduced softmax unit: every decode step goes
+    through the fused comparator (``fused_argmax_head_with_value``) —
+    argmax over ``h @ W`` with the (B, V) logits never materialized; no
+    exp, no normalizing sum, no divide (Theorem 1);
+  - top-k sampling uses the k-winner comparator (``fused_topk_head``):
+    O(k) softmax over the survivors instead of O(V) over the vocab.
+
+``head_mode``: 'reduced' (fused comparator, XLA or Pallas per
+``cfg.use_pallas``), 'fused' (force the Pallas kernel), 'sharded'
+(vocab-sharded multi-chip head via ``sharded_reduced_head``; pass
+``mesh=``), 'softmax' (the full-softmax baseline unit).
+
+``kv_layout='dense'`` keeps the seed engine's per-slot ``max_len`` cache
+as the byte-identical oracle the paged path is tested against.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import api, lm
+from repro.models import api
+from repro.parallel import env
+from repro.serve.paged_kv import PagedKVStore
+
+# The k-winner comparator unrolls k selection passes (kernel scratch is
+# (Bt, k)); beyond this bound compile time explodes and the O(k)-softmax
+# advantage over the full unit is gone anyway.
+MAX_TOP_K = 64
+
+
+# ---------------------------------------------------------------------------
+# Jitted step bodies, shared across engine instances.
+#
+# Keyed on hashable statics (ModelConfig is a frozen dataclass) so a new
+# engine over the same config reuses compiles — benchmarks measure serving,
+# not retracing. ``mesh`` is in the key because sharded-head tracing reads
+# it from the ambient env at trace time.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _jitted_prefill(cfg: ModelConfig, head_mode: str, top_k: int,
+                    cache_len: int, mesh):
+    if top_k > 1:
+        fn = lambda p, b: api.serve_topk_prefill(p, cfg, b, cache_len,
+                                                 top_k, head_mode)
+    else:
+        fn = lambda p, b: api.serve_prefill(p, cfg, b, cache_len,
+                                            head_mode=head_mode)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(cfg: ModelConfig, head_mode: str, top_k: int, treedef,
+                 paged_mask: tuple, block_size: int, mesh):
+    """Decode-step body over the split cache: gather paged leaves by
+    block table, run the model, scatter the written row back into the
+    pool.  top_k=0 -> greedy via the fused comparator."""
+
+    def step(params, toks, pools, denses, btab, pos):
+        leaves = []
+        for m, pool, dense in zip(paged_mask, pools, denses):
+            if m:
+                g = pool[:, btab]                # (L, B, nb, bs, H, hd)
+                leaves.append(g.reshape(
+                    g.shape[0], g.shape[1], -1, *g.shape[4:]))
+            else:
+                leaves.append(dense)
+        cache = jax.tree.unflatten(treedef, leaves)
+        if top_k:
+            out, new_cache = api.serve_topk_decode(
+                params, cfg, toks, cache, pos, top_k, head_mode)
+        else:
+            out, new_cache = api.serve_decode(
+                params, cfg, toks, cache, pos, head_mode=head_mode)
+        new_pools, new_denses = [], []
+        blk = None
+        if btab is not None:
+            blk = jnp.take(btab, pos // block_size, axis=1)       # (B,)
+        for m, pool, new_leaf in zip(paged_mask, pools,
+                                     jax.tree.flatten(new_cache)[0]):
+            if m:
+                row = jax.lax.dynamic_slice_in_dim(
+                    new_leaf, pos, 1, axis=2)[:, :, 0]            # (L,B,H,hd)
+                new_pools.append(pool.at[:, blk, pos % block_size].set(
+                    row.astype(pool.dtype)))
+                new_denses.append(None)
+            else:
+                new_pools.append(None)
+                new_denses.append(new_leaf)
+        return out, new_pools, new_denses
+
+    # pools are donated: write_back unconditionally replaces store.pools
+    # with the returned arrays, so the update aliases in place instead of
+    # keeping a second full copy of the KV pool live per step.
+    return jax.jit(step, donate_argnums=(2,))
 
 
 @dataclasses.dataclass
@@ -31,112 +119,241 @@ class Request:
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
+    top_k: int = 1                     # 1 = greedy (the pure comparator)
+    temperature: float = 1.0
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # per-request sampling RNG, seeded (engine seed, rid) at submit: the
+    # nth emitted token consumes the nth draw regardless of scheduling
+    # (cohorting, deferral, preemption), so sampled generations are
+    # reproducible per request.
+    rng: Optional[np.random.Generator] = None
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_len: int = 256, eos_id: int = 1,
-                 head_mode: str = "reduced"):
+                 head_mode: str = "reduced", kv_layout: str = "paged",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_per_step: Optional[int] = None,
+                 mesh=None, seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.head_mode = head_mode
+        self.mesh = mesh
+        if head_mode == "sharded" and mesh is None:
+            raise ValueError("head_mode='sharded' requires mesh=")
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)   # next write position
-        self.cache = None
-        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0}
+        self.admit_order: List[int] = []              # admission recency
+        if prefill_per_step is not None and prefill_per_step < 1:
+            raise ValueError(
+                f"prefill_per_step={prefill_per_step}: must be >= 1 "
+                "(or None for unlimited); 0 would serve nothing forever")
+        self.prefill_per_step = prefill_per_step
+        self.seed = seed
+        self.store = PagedKVStore(
+            params, cfg, n_slots=n_slots, max_len=max_len,
+            block_size=block_size, num_blocks=num_blocks, layout=kv_layout)
+        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
+                      "deferred": 0, "preemptions": 0}
 
-        self._decode = jax.jit(
-            lambda p, t, c, pos: api.serve_decode(
-                p, cfg, t, c, pos, head_mode=head_mode))
-        self._prefill_cache = {}
+    def _decode_fn(self, top_k: int):
+        return _jitted_step(self.cfg, self.head_mode,
+                            0 if top_k <= 1 else top_k, self.store.treedef,
+                            tuple(self.store.paged_mask),
+                            self.store.block_size, self.mesh)
+
+    def _prefill_fn(self, cache_len: int, top_k: int):
+        return _jitted_prefill(self.cfg, self.head_mode,
+                               0 if top_k <= 1 else top_k, cache_len,
+                               self.mesh)
 
     # -- queue management ----------------------------------------------------
     def submit(self, req: Request):
+        k_cap = min(MAX_TOP_K, self.cfg.vocab_size)
+        if not 1 <= req.top_k <= k_cap:
+            raise ValueError(
+                f"top_k={req.top_k} out of range [1, {k_cap}] "
+                f"(min(MAX_TOP_K={MAX_TOP_K}, vocab_size="
+                f"{self.cfg.vocab_size}))")
+        if req.top_k > 1 and self.head_mode not in ("reduced", "fused"):
+            # top-k sampling always runs the k-winner comparator; the
+            # 'softmax' baseline and 'sharded' head have no top-k form
+            # yet — reject rather than silently substituting the reduced
+            # path (which would fake any baseline comparison).
+            raise ValueError(
+                f"top_k sampling is not implemented for head_mode="
+                f"{self.head_mode!r}; use 'reduced' or 'fused'")
+        if len(req.prompt) > self.max_len - 1:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds max_len-1="
+                f"{self.max_len - 1}")
+        if req.rng is None:
+            req.rng = np.random.default_rng([self.seed, req.rid])
         self.queue.append(req)
 
     def _free_slots(self):
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def _admit(self):
-        """Prefill queued requests into free slots."""
+        """Prefill queued requests into free slots (continuous batching).
+
+        At most ``prefill_per_step`` admissions per engine iteration so
+        prefill work cannot starve in-flight decodes; admission defers
+        when the block pool cannot cover the prompt plus one decode block.
+        """
+        budget = self.prefill_per_step
         for i in self._free_slots():
-            if not self.queue:
+            if not self.queue or budget == 0:
                 break
-            req = self.queue.popleft()
+            req = self.queue[0]
             S = len(req.prompt)
+            if not self.store.can_admit(S):
+                self.stats["deferred"] += 1
+                break
+            self.queue.popleft()
+            plen = self.store.prefill_len(S)
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-            plen = S
-            fn = self._prefill_fn(plen)
-            tok, cache1 = fn(self.params, batch)
+            fn = self._prefill_fn(plen, req.top_k)
+            with env.use_mesh(self.mesh):
+                out, cache1 = fn(self.params, batch)
             self.stats["prefills"] += 1
-            req.generated.append(int(tok[0]))
-            if self.cache is None:
-                self.cache = self._blank_cache()
-            self._write_slot_cache(i, cache1)
+            req.generated.append(self._pick(req, out))
+            self.store.admit(i, jax.tree.flatten(cache1)[0], S)
             self.slots[i] = req
             self.slot_pos[i] = S
+            self.admit_order.append(i)
             self._check_done(i)
+            if budget is not None:
+                budget -= 1
 
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
-            self._prefill_cache[plen] = jax.jit(
-                lambda p, b: api.serve_prefill(
-                    p, self.cfg, b, self.max_len,
-                    head_mode=self.head_mode))
-        return self._prefill_cache[plen]
+    def _pick(self, req: Request, out, row: int = 0) -> int:
+        """Turn a head output into a token id: greedy comparator output
+        directly, or an O(k) softmax sample over the top-k survivors."""
+        if req.top_k <= 1:
+            return int(out[row])
+        vals, idxs = out
+        vals = np.asarray(vals[row], np.float32)
+        idxs = np.asarray(idxs[row])
+        if req.temperature <= 0.0:
+            return int(idxs[0])
+        z = vals / req.temperature
+        p = np.exp(z - z.max())
+        p /= p.sum()
+        return int(req.rng.choice(idxs, p=p))
 
-    # -- cache plumbing -------------------------------------------------------
-    def _blank_cache(self):
-        return jax.tree.map(
-            lambda a: jnp.zeros((a.shape[0], self.n_slots) + a.shape[2:],
-                                a.dtype),
-            jax.eval_shape(lambda p: lm.init_cache(
-                p, self.cfg, 1, self.max_len), self.params))
-
-    def _write_slot_cache(self, slot: int, cache1):
-        """Copy a B=1 prefill cache into slot ``slot`` of the engine cache."""
-        self.cache = jax.tree.map(
-            lambda full, one: full.at[:, slot:slot + 1].set(
-                one.astype(full.dtype)), self.cache, cache1)
+    def _preempt_youngest(self, keep: int) -> bool:
+        """Pool exhausted mid-decode: push the most recently admitted slot
+        (except ``keep``) back to the queue, freeing its blocks.  The
+        request re-prefills later with its tokens so far as the prompt."""
+        for i in reversed(self.admit_order):
+            if i == keep or self.slots[i] is None:
+                continue
+            req = self.slots[i]
+            # fold emitted tokens into the prompt; ``generated`` keeps the
+            # full emission history (re-prefill continues exactly after it)
+            req.prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.generated, np.int32)])
+            self._release_slot(i)
+            self.queue.appendleft(req)
+            self.stats["preemptions"] += 1
+            return True
+        return False
 
     # -- main loop ------------------------------------------------------------
     def step(self):
-        """One engine iteration: admit, then one decode step for all
-        active slots."""
+        """One engine iteration: admit, then one decode step for every
+        position-cohort of active slots."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
-            return False
-        # NOTE single shared pos: slots decode at their own positions; we
-        # pass per-engine max position and mask per-slot validity via the
-        # linear-cache mask (kv_pos <= pos). For simplicity all slots share
-        # the engine-step pos = that slot's own pos is handled by decoding
-        # slots with equal pos cohorts.
-        cohorts: Dict[int, list] = {}
+            if self.queue and not self.store.can_admit(
+                    len(self.queue[0].prompt)):
+                # nothing is running, so every block is free — if the head
+                # request still doesn't fit it never will: fail loudly
+                # instead of spinning to max_iters with served=0.
+                req = self.queue[0]
+                raise MemoryError(
+                    f"request rid={req.rid} ({len(req.prompt)}-token "
+                    f"prompt) can never be admitted: pool of "
+                    f"{self.store.allocator.num_blocks} x "
+                    f"{self.store.block_size}-token blocks is too small")
+            return bool(self.queue)
+        # Slots decode at their own positions; cohorts share (pos, top_k)
+        # so one jitted call serves each group.
+        cohorts: Dict[tuple, list] = {}
         for i in active:
-            cohorts.setdefault(int(self.slot_pos[i]), []).append(i)
-        for pos, idxs in cohorts.items():
-            toks = np.array([[self.slots[i].generated[-1]] for i in idxs],
+            k = self.slots[i].top_k if self.slots[i].top_k > 1 else 0
+            cohorts.setdefault((int(self.slot_pos[i]), k), []).append(i)
+        for (pos, k), idxs in sorted(cohorts.items()):
+            idxs = [i for i in idxs if self._ensure_blocks(i, pos)]
+            # a later member's ensure may have PREEMPTED an earlier
+            # accepted member (keep= only shields the current slot):
+            # re-validate the whole cohort after the capacity pass.
+            idxs = [i for i in idxs if self.slots[i] is not None]
+            if not idxs:
+                continue
+            # Bucket batch and block-view sizes to powers of two so decode
+            # compiles O(log n_slots * log max_blocks) shapes, not one per
+            # (cohort, seq-length) pair. Padding rows duplicate row 0
+            # (identical compute; the duplicate write-back lands the same
+            # value on the same block); padding block columns repeat a
+            # valid block whose rows the kv_pos<=pos mask discards.
+            n_real = len(idxs)
+            padded = idxs + [idxs[0]] * ((1 << (n_real - 1).bit_length())
+                                         - n_real)
+            toks = np.array([[self.slots[i].generated[-1]] for i in padded],
                             np.int32)
-            sub_cache = jax.tree.map(
-                lambda a: a[:, np.asarray(idxs)], self.cache)
-            out, new_sub = self._decode(self.params, jnp.asarray(toks),
-                                        sub_cache, jnp.int32(pos))
+            btab = self.store.block_table(padded, pos)
+            if btab is not None:
+                nb = btab.shape[1]
+                nbb = 1 << (nb - 1).bit_length()
+                if nbb > nb:
+                    btab = np.concatenate(
+                        [btab, np.repeat(btab[:, :1], nbb - nb, axis=1)],
+                        axis=1)
+            denses = self.store.dense_sub(padded)
+            with env.use_mesh(self.mesh):
+                out, new_pools, new_denses = self._decode_fn(k or 1)(
+                    self.params, jnp.asarray(toks), self.store.pools,
+                    denses, btab, jnp.int32(pos))
             self.stats["decode_steps"] += 1
-            self.cache = jax.tree.map(
-                lambda full, sub: full.at[:, np.asarray(idxs)].set(sub),
-                self.cache, new_sub)
+            self.store.write_back(
+                idxs, new_pools,
+                [None if d is None else d[:, :n_real] for d in new_denses])
+            # one device->host sync per cohort, not per slot
+            out = tuple(np.asarray(o) for o in out) if isinstance(
+                out, tuple) else np.asarray(out)
             for j, i in enumerate(idxs):
-                self.slots[i].generated.append(int(out[j]))
+                self.slots[i].generated.append(
+                    self._pick(self.slots[i], out, row=j))
                 self.slot_pos[i] += 1
                 self._check_done(i)
         return True
+
+    def _ensure_blocks(self, i: int, pos: int) -> bool:
+        """Grow slot i's block table to cover ``pos``; preempt the
+        youngest other slot if the pool is dry."""
+        if self.slots[i] is None:      # preempted earlier in this cohort
+            return False
+        while not self.store.ensure_capacity(i, pos):
+            if not self._preempt_youngest(keep=i):
+                raise MemoryError(
+                    "paged KV pool too small for a single sequence: "
+                    f"pos={pos} block_size={self.store.block_size} "
+                    f"num_blocks={self.store.allocator.num_blocks}")
+        return self.slots[i] is not None
+
+    def _release_slot(self, i: int):
+        self.store.release(i)
+        self.slots[i] = None
+        self.admit_order.remove(i)
 
     def _check_done(self, i: int):
         req = self.slots[i] if self.slots[i] else None
@@ -148,12 +365,12 @@ class ServeEngine:
         if hit_eos or full or over:
             req.done = True
             self.stats["completed"] += 1
-            self.slots[i] = None     # free the slot (continuous batching)
+            self._release_slot(i)     # blocks back to the free list
 
     def run(self, max_iters: int = 1000):
-        done: List[Request] = []
         it = 0
-        while (self.queue or any(self.slots)) and it < max_iters:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and it < max_iters:
             self.step()
             it += 1
         return self.stats

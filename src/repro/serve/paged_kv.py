@@ -1,0 +1,211 @@
+"""Paged (block) KV cache for the serving engine.
+
+The dense engine reserved ``n_slots x max_len`` KV rows up front — a
+sequence at position 30 pinned 256 rows.  The paged store instead splits
+the linear (full-attention) K/V leaves of the model cache into fixed-size
+blocks drawn from one shared pool:
+
+  - per slot, a BLOCK TABLE maps view positions ``[b * block_size, ...)``
+    to pool blocks; blocks are allocated on demand as the sequence grows
+    and returned to the FREE LIST the moment the request completes;
+  - decode gathers exactly ``ceil((pos+1)/block_size)`` blocks per slot,
+    so attention reads scale with the sequence's real length, not
+    ``max_len``;
+  - non-linear cache state is NOT paged: sliding-window ring buffers are
+    already O(window), recurrent (RG-LRU / RWKV) state is O(1), and
+    cross-attention K/V is read-only — those stay dense per-slot.
+
+The split is decided per cache LEAF from its shape (the linear attention
+layout is ``(layers, B, max_len, n_kv_heads, head_dim)``), so every
+architecture family in the zoo works: pure-attention models page all
+their KV, hybrid/ssm models page nothing and degrade gracefully to the
+dense layout for their O(1)/O(window) state.
+
+Numerics: a gathered ``nb * block_size`` view is masked exactly like the
+dense ``max_len`` view (``kv_pos <= pos``; masked scores are -1e30, whose
+exp underflows to exactly 0.0 in f32), so paged and dense decode agree on
+greedy outputs — asserted token-exactly by tests/test_serve_paged.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` pool blocks.
+
+    LIFO reuse (a stack) so recently-freed blocks — still warm in cache —
+    are handed out first.  Double-free and foreign-block frees raise.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._allocated = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"paged KV pool exhausted: need {n}, free {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"free of unallocated block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+
+class PagedKVStore:
+    """Owns the pool + dense leaves of the engine cache and the per-slot
+    block tables.  ``kv_layout='dense'`` is the degenerate store where no
+    leaf is paged (exactly the seed engine's cache), used as the oracle.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
+                 max_len: int, block_size: int = 16,
+                 num_blocks: Optional[int] = None, layout: str = "paged"):
+        assert layout in ("paged", "dense"), layout
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks_per_slot = -(-max_len // block_size)
+        if num_blocks is None:
+            # default: same worst-case residency as the dense layout; pass
+            # fewer to overcommit (the scheduler defers/preempts on empty).
+            num_blocks = n_slots * self.max_blocks_per_slot
+
+        struct = jax.eval_shape(
+            lambda p: lm.init_cache(p, cfg, 1, max_len), params)
+        leaves, self.treedef = jax.tree.flatten(struct)
+        # Sliding-window models keep the dense layout outright: their ring
+        # caches are already O(window), and a gathered view whose length
+        # happened to equal the window would flip attention into ring
+        # addressing.  Paging is for the UNBOUNDED linear KV only.
+        windowed = cfg.attention_window is not None
+
+        def _pageable(leaf) -> bool:
+            return (layout == "paged"
+                    and not windowed
+                    and leaf.ndim == 5
+                    and leaf.shape[1] == 1
+                    and leaf.shape[2] == max_len
+                    and leaf.shape[3] == cfg.n_kv_heads
+                    and leaf.shape[4] == cfg.head_dim)
+
+        self.paged_mask = [_pageable(l) for l in leaves]
+        self.pools = [
+            jnp.zeros((l.shape[0], num_blocks, block_size) + l.shape[3:],
+                      l.dtype) if m else None
+            for l, m in zip(leaves, self.paged_mask)
+        ]
+        self.denses = [
+            None if m else jnp.zeros((l.shape[0], n_slots) + l.shape[2:],
+                                     l.dtype)
+            for l, m in zip(leaves, self.paged_mask)
+        ]
+        self.allocator = BlockAllocator(num_blocks)
+        self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
+
+    @property
+    def any_paged(self) -> bool:
+        return any(self.paged_mask)
+
+    # -- block accounting ----------------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size) if self.any_paged else 0
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Enough free blocks for the prompt plus one decode block."""
+        if not self.any_paged:
+            return True
+        need = min(self.blocks_for(prompt_len) + 1, self.max_blocks_per_slot)
+        return self.allocator.n_free >= need
+
+    def prefill_len(self, prompt_len: int) -> int:
+        """Padded cache length a prefill should build for this prompt.
+
+        Paged: the block-aligned prompt cover (so prefill leaves reshape
+        straight into pool blocks).  Dense: the full max_len (seed
+        behaviour).
+        """
+        if not self.any_paged:
+            return self.max_len
+        return self.blocks_for(prompt_len) * self.block_size
+
+    # -- slot lifecycle ------------------------------------------------------
+    def admit(self, slot: int, cache1_leaves, prompt_len: int) -> None:
+        """Write a B=1 prefill cache (built at ``prefill_len``) into
+        ``slot``: paged leaves scatter into freshly-allocated pool blocks,
+        dense leaves copy into the slot row."""
+        assert not self.slot_blocks[slot], (slot, self.slot_blocks[slot])
+        nb = self.blocks_for(prompt_len)
+        blocks = self.allocator.alloc(nb) if nb else []
+        self.slot_blocks[slot] = blocks
+        bs = self.block_size
+        for j, (m, leaf) in enumerate(zip(self.paged_mask, cache1_leaves)):
+            if m:
+                view = leaf[:, 0, :nb * bs]                   # (L, nb*bs, ...)
+                blk = view.reshape(view.shape[0], nb, bs, *view.shape[2:])
+                self.pools[j] = self.pools[j].at[:, np.asarray(blocks)].set(
+                    blk.astype(self.pools[j].dtype))
+            else:
+                self.denses[j] = self.denses[j].at[:, slot].set(
+                    leaf[:, 0].astype(self.denses[j].dtype))
+
+    def ensure_capacity(self, slot: int, pos: int) -> bool:
+        """Make sure ``slot`` owns the block covering write index ``pos``.
+        Returns False when the pool is exhausted (caller preempts)."""
+        if not self.any_paged:
+            return True
+        need = pos // self.block_size + 1
+        have = len(self.slot_blocks[slot])
+        if have >= need:
+            return True
+        if self.allocator.n_free < need - have:
+            return False
+        self.slot_blocks[slot].extend(self.allocator.alloc(need - have))
+        return True
+
+    def release(self, slot: int) -> None:
+        self.allocator.free(self.slot_blocks[slot])
+        self.slot_blocks[slot] = []
+
+    # -- cohort views --------------------------------------------------------
+    def block_table(self, idxs, pos: int) -> Optional[np.ndarray]:
+        """(B, nb) int32 table covering positions [0, pos] for the cohort
+        (every slot at the same pos owns the same block count)."""
+        if not self.any_paged:
+            return None
+        nb = pos // self.block_size + 1
+        return np.asarray(
+            [self.slot_blocks[i][:nb] for i in idxs], np.int32)
+
+    def dense_sub(self, idxs):
+        """Cohort slices of the dense leaves (None where paged)."""
+        sel = np.asarray(idxs)
+        return [None if d is None else d[:, sel] for d in self.denses]
+
+    def write_back(self, idxs, new_pools, new_denses) -> None:
+        sel = np.asarray(idxs)
+        for j, (np_, nd) in enumerate(zip(new_pools, new_denses)):
+            if np_ is not None:
+                self.pools[j] = np_
+            if nd is not None:
+                self.denses[j] = self.denses[j].at[:, sel].set(nd)

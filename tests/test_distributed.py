@@ -29,10 +29,10 @@ REPO = Path(__file__).resolve().parent.parent
 # Metadata: every param/batch/cache spec divides the production meshes
 # ---------------------------------------------------------------------------
 def _abstract_mesh(multi_pod):
-    from jax.sharding import AbstractMesh
+    from repro.compat import abstract_mesh
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def _check_divisible(tree, specs, mesh, where):
@@ -142,6 +142,42 @@ def test_distributed_reduced_head_matches_local():
         print("HEAD OK")
     """)
     assert "HEAD OK" in out
+
+
+def test_sharded_engine_8dev_matches_local_and_ties():
+    """The vocab-sharded reduced head through the SERVING ENGINE on 8
+    devices: generations match the local engine, and an exact logit tie
+    spanning two vocab SHARDS resolves to the lowest global index."""
+    out = _run_sub("""
+        from repro.models import lm
+        from repro.serve.engine import Request, ServeEngine
+        cfg = smoke_config(ARCHS["qwen3-0.6b"])
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        # exact tie between vocab ids 10 (shard 0) and 200 (shard 6)
+        w = np.array(lm.lm_head_weight(params, cfg))
+        w[:, 200] = w[:, 10]
+        params["embed"] = jnp.asarray(w.T)        # qwen3 ties embeddings
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=7).astype(np.int32)
+                   for _ in range(3)]
+
+        def serve(head_mode, mesh):
+            eng = ServeEngine(params, cfg, n_slots=2, max_len=32, eos_id=1,
+                              head_mode=head_mode, mesh=mesh)
+            reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            return [r.generated for r in reqs]
+
+        mesh = mesh_mod.make_host_mesh(model=8)   # all devices on 'model'
+        got = serve("sharded", mesh)
+        want = serve("reduced", None)
+        assert got == want, (got, want)
+        assert all(200 not in g for g in got), got
+        print("SHARDED ENGINE OK")
+    """)
+    assert "SHARDED ENGINE OK" in out
 
 
 def test_moe_ep_8dev_matches_oracle():

@@ -59,8 +59,8 @@ def test_pipeline_matches_sequential():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from repro.parallel.pipeline import pipeline_apply, bubble_fraction
-        mesh = jax.make_mesh((4,), ("pipe",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch import mesh as mesh_mod
+        mesh = mesh_mod.make_mesh((4,), ("pipe",))
         P_stages, D = 4, 16
         key = jax.random.PRNGKey(0)
         ws = jax.random.normal(key, (P_stages, D, D)) * 0.3
@@ -93,17 +93,17 @@ def test_compressed_psum_multidevice():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import compressed_psum
-        mesh = jax.make_mesh((4,), ("dp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        from repro.launch import mesh as mesh_mod
+        mesh = mesh_mod.make_mesh((4,), ("dp",))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
 
         def f(g_shard):
             synced, err = compressed_psum({"g": g_shard}, "dp")
             return synced["g"], err["g"]
 
-        synced, err = jax.shard_map(f, mesh=mesh, in_specs=(P("dp"),),
-                                    out_specs=(P(None), P("dp")),
-                                    check_vma=False)(g)
+        synced, err = compat.shard_map(f, mesh=mesh, in_specs=(P("dp"),),
+                                       out_specs=(P(None), P("dp")))(g)
         want = jnp.mean(g, axis=0)
         got = synced[0]
         scale = float(jnp.max(jnp.abs(g))) / 127

@@ -8,8 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # bare env: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     PREDICT_FNS,
