@@ -1,6 +1,6 @@
 """Serving benchmark: the reduced head vs the full-softmax head through
 the continuous-batching engine, across slot counts and a mixed
-prompt-length workload.
+prompt-length workload — plus the paged-decode flatness probe.
 
 For each n_slots the same request trace (mixed short/medium/long prompts)
 is served by:
@@ -14,10 +14,19 @@ greedy outputs are asserted token-identical to the dense (seed-layout)
 engine on every trace — the system-level form of Theorem 1's "identical
 classification" claim.
 
+The ``latency vs max_len`` sweep holds the actual sequence length fixed
+and grows only the engine's ``max_len`` headroom: paged decode reads the
+pool through block tables (work tracks the real length), so its
+per-step latency stays flat while the dense layout's per-step cost grows
+with the padded cache it must re-scan.  Results land in
+``BENCH_serve.json`` so the gather removal stays visible in CI history.
+
   PYTHONPATH=src python benchmarks/bench_serve.py [--slots 2 4 8] \
-      [--requests 16] [--max-new 8] [--arch qwen3-0.6b]
+      [--requests 16] [--max-new 8] [--arch qwen3-0.6b] \
+      [--max-len-sweep 64 128 256 512]
 """
 import argparse
+import json
 import time
 
 import jax
@@ -99,6 +108,50 @@ def run(arch="qwen3-0.6b", slot_counts=(2, 4, 8), n_requests=16,
     return rows
 
 
+def latency_vs_max_len(arch="qwen3-0.6b", max_lens=(64, 128, 256, 512),
+                       prompt_len=24, max_new=24, block_size=16,
+                       verbose=True):
+    """Per-step decode latency at FIXED sequence length as ``max_len``
+    (the engine's padding headroom) grows.
+
+    Paged decode touches only the blocks covering the real sequence, so
+    its per-step latency must stay flat (within noise) across the sweep
+    — the acceptance probe for the gather removal.  The dense layout
+    re-scans its ``max_len``-sized cache every step and degrades.
+    """
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    rows = []
+    for layout in ("paged", "dense"):
+        for max_len in max_lens:
+            def once():
+                eng = ServeEngine(params, cfg, n_slots=1, max_len=max_len,
+                                  eos_id=-1, kv_layout=layout,
+                                  block_size=block_size)
+                eng.submit(Request(0, prompt.copy(), max_new))
+                # first step() runs the prefill (whose dense-layout cost
+                # grows with max_len) plus one decode — keep it OUT of
+                # the timed region so ms/step measures decode only
+                eng.step()
+                t0 = time.perf_counter()
+                stats = eng.run(max_iters=10000)
+                return ((time.perf_counter() - t0)
+                        / (stats["decode_steps"] - 1))
+
+            once()                      # warmup: compile every step shape
+            per_step = min(once() for _ in range(3))
+            rows.append(dict(layout=layout, max_len=max_len,
+                             seq_len=prompt_len + max_new,
+                             ms_per_step=per_step * 1e3))
+            if verbose:
+                print(f"{layout:5s} max_len={max_len:4d} "
+                      f"seq_len={prompt_len + max_new:3d}  "
+                      f"{per_step * 1e3:7.2f} ms/step")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -106,6 +159,9 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-len-sweep", type=int, nargs="+",
+                    default=[64, 128, 256, 512])
+    ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     rows = run(arch=args.arch, slot_counts=tuple(args.slots),
                n_requests=args.requests, max_new=args.max_new,
@@ -114,6 +170,18 @@ def main():
     print(f"\nbest: {best['reduced_tok_s']:.1f} tok/s at "
           f"{best['n_slots']} slots (reduced head, paged KV); "
           f"softmax-head baseline {best['softmax_tok_s']:.1f} tok/s")
+    print("\nper-step decode latency vs max_len (fixed sequence length):")
+    sweep = latency_vs_max_len(arch=args.arch,
+                               max_lens=tuple(args.max_len_sweep))
+    paged = [r["ms_per_step"] for r in sweep if r["layout"] == "paged"]
+    print(f"paged flatness: {max(paged) / min(paged):.2f}x "
+          f"across {min(args.max_len_sweep)}..{max(args.max_len_sweep)} "
+          f"max_len (1.0 = perfectly flat)")
+    with open(args.out, "w") as f:
+        json.dump({"arch": args.arch, "backend": jax.default_backend(),
+                   "slot_sweep": rows, "latency_vs_max_len": sweep},
+                  f, indent=2)
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,16 @@
-"""Serving demo: continuous batching + paged KV with the Reduced head.
+"""Serving demo: continuous batching + paged KV with Sampler heads.
 
-Shows the engine admitting a mixed queue of greedy and top-k requests
-into a fixed set of decode slots over a block-paged KV pool, freeing
-blocks on completion, and (the paper's point) that greedy serving never
-computes a softmax: every greedy step is the fused comparator, and the
-top-k requests only ever exp/normalize k values instead of the vocab.
+Shows the engine admitting a mixed queue of ``Sampler``-typed requests
+(greedy comparator, top-k comparator bus, Gumbel-max temperature) into a
+fixed set of decode slots over a block-paged KV pool — decode attention
+reads the pool in place through block tables; no per-step gather — and
+(the paper's point) that greedy serving never computes a softmax: every
+greedy step is the fused comparator, the top-k requests only ever
+exp/normalize k values instead of the vocab, and the temperature
+requests sample by perturb-then-compare.
+
+The same greedy trace is then re-served through ``SoftmaxBaseline`` (the
+full softmax unit) and asserted TOKEN-IDENTICAL — Theorem 1 live.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -16,26 +22,38 @@ import numpy as np
 from repro.configs import ARCHS, smoke_config
 from repro.models import lm
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampler import Greedy, SoftmaxBaseline, Temperature, TopK
+
+
+def serve(params, cfg, prompts, samplers, max_news):
+    eng = ServeEngine(params, cfg, n_slots=4, max_len=96, eos_id=1,
+                      kv_layout="paged", block_size=16)
+    reqs = [Request(i, p.copy(), max_new_tokens=n, sampler=s)
+            for i, (p, s, n) in enumerate(zip(prompts, samplers, max_news))]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    stats = eng.run()
+    return reqs, stats, time.perf_counter() - t0, eng
 
 
 def main():
     cfg = smoke_config(ARCHS["qwen3-0.6b"])
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(params, cfg, n_slots=4, max_len=96, eos_id=1,
-                      head_mode="reduced", kv_layout="paged", block_size=16)
 
     rng = np.random.default_rng(0)
     n_req = 12
-    for rid in range(n_req):
-        plen = int(rng.integers(4, 24))
-        topk = 4 if rid % 3 == 0 else 1   # every 3rd request samples top-4
-        eng.submit(Request(rid, rng.integers(0, cfg.vocab_size, plen)
-                           .astype(np.int32),
-                           max_new_tokens=int(rng.integers(4, 12)),
-                           top_k=topk, temperature=0.8))
-    t0 = time.perf_counter()
-    stats = eng.run()
-    dt = time.perf_counter() - t0
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 24))).astype(np.int32)
+               for _ in range(n_req)]
+    max_news = [int(rng.integers(4, 12)) for _ in range(n_req)]
+    # mixed queue: greedy comparator / top-4 comparator bus / Gumbel-max
+    samplers = [TopK(4, temperature=0.8) if rid % 3 == 0
+                else Temperature(0.8) if rid % 3 == 1
+                else Greedy()
+                for rid in range(n_req)]
+
+    reqs, stats, dt, eng = serve(params, cfg, prompts, samplers, max_news)
     alloc = eng.store.allocator
     print(f"served {n_req} requests in {dt:.2f}s with {eng.n_slots} slots")
     print(f"stats: {stats}")
@@ -43,9 +61,19 @@ def main():
           f"{eng.store.block_size} tokens, {alloc.n_free} free at exit")
     tput = stats["decode_steps"] / dt
     print(f"engine decode steps/s: {tput:.1f} "
-          f"(head unit: argmax only — zero exp/div, Theorem 1)")
+          f"(greedy head unit: argmax only — zero exp/div, Theorem 1)")
     assert stats["completed"] == n_req
     assert alloc.n_free == alloc.num_blocks  # every block returned
+
+    # Theorem 1 live: the SAME trace, greedy everywhere, served through
+    # the reduced comparator and the full softmax unit — token-identical.
+    grd, _, _, _ = serve(params, cfg, prompts, [Greedy()] * n_req, max_news)
+    soft, _, _, _ = serve(params, cfg, prompts,
+                          [SoftmaxBaseline()] * n_req, max_news)
+    same = [g.generated == s.generated for g, s in zip(grd, soft)]
+    print(f"reduced vs softmax generations identical: "
+          f"{sum(same)}/{n_req} requests")
+    assert all(same), "Theorem 1 violated: reduced != softmax tokens"
 
 
 if __name__ == "__main__":

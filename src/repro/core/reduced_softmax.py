@@ -69,7 +69,8 @@ def topk_sample(vals: jax.Array, idxs: jax.Array, key,
     instead of O(V).  vals/idxs: (B, k) from ``reduced_topk`` or the fused
     kernel; temperature <= 0 degenerates to greedy (= the k=1 comparator).
     The serving engine applies the same math host-side per request
-    (``ServeEngine._pick``) for per-request numpy-RNG reproducibility.
+    (``serve.sampler.TopK.pick``) for per-request numpy-RNG
+    reproducibility.
     """
     if temperature <= 0.0:
         return idxs[:, 0].astype(jnp.int32)
@@ -86,7 +87,7 @@ def fused_reduced_topk(
     k: int,
     *,
     use_pallas: bool = False,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,   # None: auto (ops.resolve_flags)
     block_v: int = 512,
     block_k: int = 512,
     block_b: int = 128,

@@ -5,6 +5,9 @@
  - fused_xent        : training-head softmax-CE without materialized probs
  - flash_attention   : online-softmax attention tiling (the §Roofline
                        memory-bound rows' lever; GQA-native, causal+window)
+ - paged_attention   : decode attention straight off the block-paged KV
+                       pool (block table drives the BlockSpec index maps;
+                       no dense per-step gather)
 
 Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
 """

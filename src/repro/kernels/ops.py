@@ -1,11 +1,21 @@
 """Public, jit'd entry points for the kernels package.
 
-Every op takes ``use_pallas``/``interpret`` switches:
+Every op takes the same ``use_pallas``/``interpret`` switches, resolved
+in ONE place (``resolve_flags``):
 
-  - ``use_pallas=False``  -> the pure-jnp oracle (ref.py). This is what the
-    dry-run lowers, so roofline numbers are XLA's, not the interpreter's.
-  - ``use_pallas=True, interpret=True``  -> Pallas interpret mode (CPU CI).
-  - ``use_pallas=True``  on TPU -> the real VMEM-tiled kernel.
+  - ``use_pallas=False`` (default) -> the pure-jnp oracle (ref.py). This
+    is what the dry-run lowers, so roofline numbers are XLA's, not the
+    interpreter's.
+  - ``use_pallas=True, interpret=None`` -> auto: the real VMEM-tiled
+    kernel on TPU, Pallas interpret mode everywhere else (CPU CI).
+  - explicit ``interpret=True/False`` is honored as given (tests pin
+    interpret mode; TPU runs pin compiled mode).
+
+Historically each entry hardcoded ``interpret=True`` while defaulting
+``use_pallas=False`` — a dead flag on the ref path and a silent
+interpreter fallback on TPU for callers who flipped ``use_pallas`` only.
+``resolve_flags`` is the single source of truth; ``fused_*``,
+``online_softmax``, ``softmax_*`` and ``paged_attention`` all share it.
 
 ``softmax_xent`` is differentiable (custom_vjp): forward avoids
 materializing probabilities; backward recomputes ``softmax - onehot``
@@ -14,6 +24,7 @@ blockwise from the saved logits instead of storing probs as residuals.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,19 +33,34 @@ from repro.kernels import fused_argmax_head as _fah
 from repro.kernels import fused_topk_head as _ftk
 from repro.kernels import fused_xent as _fx
 from repro.kernels import online_softmax as _os
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ref
 
 
+def resolve_flags(use_pallas: bool, interpret: Optional[bool]):
+    """Normalize the (use_pallas, interpret) pair for every kernel entry.
+
+    ``interpret=None`` means auto: interpret everywhere except a real
+    TPU backend.  Explicit True/False passes through untouched.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return bool(use_pallas), bool(interpret)
+
+
 def fused_argmax_head(h, w, *, use_pallas: bool = False,
-                      interpret: bool = True, **block_kw):
+                      interpret: Optional[bool] = None, **block_kw):
     """argmax_v(h @ w) -> (B,) int32. The paper's reduced unit, fused."""
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if use_pallas:
         return _fah.fused_argmax_head(h, w, interpret=interpret, **block_kw)
     return ref.fused_argmax_head(h, w)
 
 
 def fused_argmax_head_with_value(h, w, *, use_pallas: bool = False,
-                                 interpret: bool = True, **block_kw):
+                                 interpret: Optional[bool] = None,
+                                 **block_kw):
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if use_pallas:
         return _fah.fused_argmax_head_with_value(
             h, w, interpret=interpret, **block_kw)
@@ -42,23 +68,44 @@ def fused_argmax_head_with_value(h, w, *, use_pallas: bool = False,
 
 
 def fused_topk_head(h, w, k, *, use_pallas: bool = False,
-                    interpret: bool = True, **block_kw):
+                    interpret: Optional[bool] = None, **block_kw):
     """Top-k (vals, idxs) of h @ w — the reduced unit's k-winner form."""
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if use_pallas:
         return _ftk.fused_topk_head(h, w, k, interpret=interpret, **block_kw)
     return ref.fused_topk_head(h, w, k)
 
 
-def online_softmax(x, *, use_pallas: bool = False, interpret: bool = True,
-                   **block_kw):
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
+                    use_pallas: bool = False,
+                    interpret: Optional[bool] = None):
+    """Decode attention straight off a block-paged KV pool.
+
+    q (B, Hq, hd); pools (num_blocks, block_size, Hkv, hd); block_tables
+    (B, nb) i32; pos scalar i32 -> (B, Hq, hd).  The Pallas kernel reads
+    pool blocks in place (block table drives the index maps); the ref
+    path is the dense decode math over the gathered view — token-exact
+    against the dense cache layout.
+    """
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
+    if use_pallas:
+        return _pa.paged_attention(q, k_pool, v_pool, block_tables, pos,
+                                   interpret=interpret)
+    return ref.paged_attention(q, k_pool, v_pool, block_tables, pos)
+
+
+def online_softmax(x, *, use_pallas: bool = False,
+                   interpret: Optional[bool] = None, **block_kw):
     """The full softmax unit (baseline)."""
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if use_pallas:
         return _os.online_softmax(x, interpret=interpret, **block_kw)
     return ref.online_softmax(x)
 
 
-def softmax_stats(x, *, use_pallas: bool = False, interpret: bool = True,
-                  **block_kw):
+def softmax_stats(x, *, use_pallas: bool = False,
+                  interpret: Optional[bool] = None, **block_kw):
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if use_pallas:
         return _os.softmax_stats(x, interpret=interpret, **block_kw)
     return ref.softmax_stats(x)
@@ -69,8 +116,9 @@ def softmax_stats(x, *, use_pallas: bool = False, interpret: bool = True,
 # ---------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def softmax_xent(logits, labels, use_pallas: bool = False,
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None):
     """Per-row softmax CE, probs never materialized in the forward."""
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if use_pallas:
         return _fx.fused_xent(logits, labels, interpret=interpret)
     return ref.fused_xent(logits, labels)

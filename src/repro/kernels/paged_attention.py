@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: paged-attention-native decode.
+
+The serving engine keeps K/V in a SHARED block pool
+(``num_blocks, block_size, Hkv, hd`` per layer) with a per-slot block
+table.  The seed engine gathered that pool into a dense ``(B, S, ...)``
+cache before every decode step — an O(seq_len) copy and re-layout per
+token that doubles HBM traffic over what attention itself must read.
+This kernel deletes the copy: the grid walks ``(batch row, block)`` and
+the BLOCK TABLE itself drives the BlockSpec index maps (scalar
+prefetch), so each pool block is DMA'd HBM->VMEM exactly once, in
+place, and the dense view never exists anywhere.
+
+  grid = (B, nb)                      # nb = blocks covering pos
+  q     (1, Hq, hd)   indexed (b, 0, 0)
+  k/v   (1, bs, Hkv, hd) indexed (btab[b, j], 0, 0, 0)   <- the trick
+  out   (1, Hq, hd)   written at j == nb - 1
+
+Inner loop is the standard online-softmax carry (same (m, l, acc)
+recurrence as kernels/flash_attention.py), GQA-native: scores are
+computed per KV head over its ``g = Hq // Hkv`` query group, no K/V
+repeat.  Positions beyond ``pos`` (the tail of the last block, plus any
+padded block-table columns) are masked to -inf before they touch the
+carry, so arbitrary pow-2 padded tables are safe.
+
+Validated in interpret mode against ``ref.paged_attention`` (which is
+itself the dense decode math applied to the gathered view).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, block_size: int,
+            nb: int, g: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (Hq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bs, Hkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    hq, hd = q.shape
+    hkv = k.shape[1]
+
+    # GQA scores without K repeat: batch the contraction over KV heads.
+    qg = q.reshape(hkv, g, hd)
+    kt = k.transpose(1, 0, 2)                         # (Hkv, bs, hd)
+    s = jax.lax.dot_general(
+        qg, kt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale    # (Hkv, g, bs)
+    s = s.reshape(hq, -1)                              # (Hq, bs)
+
+    kv_pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kv_pos <= pos_ref[0]
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)         # (Hq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # rows with no valid key yet keep m = -inf; guard exp(-inf - -inf)
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(jnp.where(valid, s - safe_m, _NEG_INF))
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.reshape(hkv, g, -1), v.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)            # (Hkv, g, hd)
+    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(hq, hd)
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
+                    interpret: bool = False):
+    """q: (B, Hq, hd); k/v_pool: (num_blocks, bs, Hkv, hd);
+    block_tables: (B, nb) int32; pos: scalar int32.  -> (B, Hq, hd)."""
+    b, hq, hd = q.shape
+    bs, hkv = k_pool.shape[1], k_pool.shape[2]
+    nb = block_tables.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_kernel, scale=scale, block_size=bs,
+                             nb=nb, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, hq, hd), lambda bi, ji, bt, pp: (bi, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda bi, ji, bt, pp: (bt[bi, ji], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, hd),
+                         lambda bi, ji, bt, pp: (bt[bi, ji], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, hd),
+                               lambda bi, ji, bt, pp: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32),
+      jnp.reshape(pos, (1,)).astype(jnp.int32),
+      q, k_pool, v_pool)

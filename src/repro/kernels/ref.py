@@ -89,6 +89,52 @@ def fused_xent(logits: jax.Array, labels: jax.Array):
 
 
 # ---------------------------------------------------------------------------
+# paged_attention: decode attention over a block-paged KV pool
+# ---------------------------------------------------------------------------
+def paged_attention(q, k_pool, v_pool, block_tables, pos):
+    """Decode-step attention reading K/V through a block table.
+
+    q: (B, Hq, hd) query for the token at ``pos``;
+    k_pool, v_pool: (num_blocks, block_size, Hkv, hd) SHARED pools;
+    block_tables: (B, nb) int32 — row b's view position ``j`` lives in
+    ``pool[block_tables[b, j // bs], j % bs]``;
+    pos: scalar int32 — attend over kv positions <= pos.
+
+    Returns (B, Hq, hd) in q.dtype.  The math is EXACTLY the dense decode
+    attention of ``models.layers.attention`` applied to the gathered
+    block view (same einsums, same f32 mask/softmax, masked scores at
+    -1e30 so exp underflows to exactly 0.0): paged and dense decode agree
+    token-exactly, which tests assert at engine level.  This oracle is
+    the XLA fallback; the Pallas kernel reads the pool blocks in place.
+    """
+    b, hq, hd = q.shape
+    bs, hkv = k_pool.shape[1], k_pool.shape[2]
+    dt = q.dtype
+    k = jnp.take(k_pool, block_tables, axis=0).astype(dt)  # (B, nb, bs, ...)
+    v = jnp.take(v_pool, block_tables, axis=0).astype(dt)
+    k = k.reshape(b, -1, hkv, hd)
+    v = v.reshape(b, -1, hkv, hd)
+    kv_pos = jnp.arange(k.shape[1])
+    mask = (kv_pos <= pos)[None, :]                        # (1, S)
+    g = hq // hkv
+    qt = q[:, None]                                        # (B, 1, Hq, hd)
+    if g > 1:
+        # grouped-query form, mirroring the dense decode branch
+        qg = qt.reshape(b, 1, hkv, g, hd)
+        scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) / (hd ** 0.5)
+        scores = scores.astype(jnp.float32)
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+        return out.reshape(b, hq, hd)
+    scores = jnp.einsum("bthd,bshd->bhts", qt, k) / (hd ** 0.5)
+    scores = scores.astype(jnp.float32)
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    return jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, hq, hd)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention: tiled attention oracle
 # ---------------------------------------------------------------------------
 def flash_attention(q, k, v, *, causal=True, window=None):

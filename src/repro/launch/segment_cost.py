@@ -269,9 +269,11 @@ def serve_cell(cfg: ModelConfig, mesh, shape: ShapeSpec,
 
     for mode in ("softmax", "reduced"):
         def head_fn(hp, h, _m=mode):
+            from repro.serve.sampler import resolve
+
             hp = lm.cast_params(hp, cfg)
             hh = lm.final_hidden(hp, cfg, h)
-            return api._head_predict(hp, cfg, hh, _m)
+            return resolve(_m).head(hp, cfg, hh)
 
         terms = _lower_cost(head_fn, mesh, (head_tree, h_struct),
                             (head_specs, h_spec))

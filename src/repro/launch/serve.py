@@ -1,14 +1,18 @@
 """Serving driver: run the continuous-batching engine from the CLI.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --requests 8 --slots 4 [--head-mode reduced|softmax|fused|sharded] \
+      --requests 8 --slots 4 \
+      [--head-mode reduced|softmax|fused|sharded|temperature] \
       [--kv-layout paged|dense] [--top-k 4 --temperature 0.8]
 
-``--head-mode sharded`` builds a (1, n_devices) host mesh and runs every
-decode step's head through ``sharded_reduced_head``: the lm_head weight is
-vocab-sharded over 'model', each shard runs the fused comparator on its
-vocab slice, and only one (val, idx) pair per row per shard crosses the
-wire — the multi-chip form of the paper's reduced unit.  Run under
+The head spec resolves to a ``Sampler`` (serve/sampler.py) — the engine,
+the model API and this driver all consume the object; no head_mode
+string ever reaches the model.  ``--head-mode sharded`` builds a
+(1, n_devices) host mesh and runs every decode step's head through
+``sharded_reduced_head``: the lm_head weight is vocab-sharded over
+'model', each shard runs the fused comparator on its vocab slice, and
+only one (val, idx) pair per row per shard crosses the wire — the
+multi-chip form of the paper's reduced unit.  Run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise it on
 a CPU host.
 """
@@ -23,6 +27,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.launch import mesh as mesh_mod
 from repro.models import lm
+from repro.serve import sampler as sampler_mod
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -35,7 +40,8 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--head-mode", default="reduced",
-                    choices=["reduced", "softmax", "fused", "sharded"])
+                    choices=["reduced", "softmax", "fused", "sharded",
+                             "temperature"])
     ap.add_argument("--kv-layout", default="paged",
                     choices=["paged", "dense"])
     ap.add_argument("--block-size", type=int, default=16)
@@ -52,8 +58,10 @@ def main():
     if args.smoke:
         cfg = smoke_config(cfg)
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    sampler = sampler_mod.resolve(args.head_mode, args.top_k,
+                                  args.temperature, cfg=cfg)
     mesh = None
-    if args.head_mode == "sharded":
+    if sampler.needs_mesh:
         # vocab-sharded head: all devices on 'model'; engine cohorts have
         # ragged batch sizes, so the batch stays replicated.
         mesh = mesh_mod.make_host_mesh(model=len(jax.devices()))
@@ -66,12 +74,11 @@ def main():
         plen = int(rng.integers(4, 24))
         eng.submit(Request(
             rid, rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=args.max_new, top_k=args.top_k,
-            temperature=args.temperature))
+            max_new_tokens=args.max_new, sampler=sampler))
     t0 = time.perf_counter()
     stats = eng.run()
     dt = time.perf_counter() - t0
-    print(f"head_mode={args.head_mode} kv={args.kv_layout} "
+    print(f"sampler={sampler} kv={args.kv_layout} "
           f"served={stats['completed']} decode_steps={stats['decode_steps']} "
           f"preempt={stats['preemptions']} wall={dt:.2f}s")
 

@@ -1,28 +1,47 @@
 """Public model API: loss, serve steps, input specs for every (arch, shape).
 
-The two serve head modes implement the paper's comparison at system level:
+Serve heads are ``Sampler`` objects (``repro.serve.sampler``): one
+protocol — device-side ``head()``, host-side ``pick()`` — behind which
+every variant lives:
 
-  head_mode='softmax'  BASELINE: the engine materializes softmax
-                       probabilities over the vocab, then takes the max —
-                       what a probability-reporting accelerator must do.
-  head_mode='reduced'  THE PAPER: greedy class = argmax of raw logits; no
-                       exp, no normalizing sum, no divide. Bit-identical
-                       predictions (Theorem 1), strictly less work.
-  head_mode='fused'    BEYOND-PAPER: reduced head via the Pallas kernel —
-                       logits are never materialized in HBM.
+  SoftmaxBaseline   BASELINE: materialize softmax probabilities over the
+                    vocab, then take the max — what a
+                    probability-reporting accelerator must do.
+  Greedy('reduced') THE PAPER: greedy class = argmax of raw logits; no
+                    exp, no normalizing sum, no divide. Bit-identical
+                    predictions (Theorem 1), strictly less work.
+  Greedy('fused')   BEYOND-PAPER: reduced head via the Pallas kernel —
+                    logits are never materialized in HBM.
+  Greedy('sharded') multi-chip: per-vocab-shard comparator + tiny combine.
+  TopK / Temperature  sampling via the k-winner bus / Gumbel-max.
+
+``serve_*`` accept a Sampler or a legacy ``head_mode`` string
+(resolved by ``sampler.resolve`` — the single string switch).
+
+``serve_decode(..., block_tables=...)`` runs decode attention straight
+off the block-paged KV pool (no dense gather): the cache tree's linear
+K/V leaves are the shared ``(layers, num_blocks, block_size, Hkv, hd)``
+pools and the block table maps each batch row's positions onto them.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.core import reduced_softmax
 from repro.models import lm
 from repro.models.layers import cdtype
+
+
+def _as_sampler(head_mode, cfg: ModelConfig):
+    """Resolve + validate: invalid head/config combinations (e.g. a top-k
+    bus on the softmax baseline) raise here instead of silently serving
+    the reduced path — a faked baseline would poison every A/B claim."""
+    from repro.serve.sampler import resolve
+
+    return resolve(head_mode, cfg=cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -57,89 +76,55 @@ def train_loss(params, cfg: ModelConfig, batch: dict) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Serving steps
 # ---------------------------------------------------------------------------
-def _head_predict(params, cfg: ModelConfig, h: jax.Array,
-                  head_mode: str) -> jax.Array:
-    """h: (B, D) -> (B,) int32 predicted next token.
-
-    Every greedy mode except the 'softmax' baseline goes through the
-    fused comparator (``fused_argmax_head_with_value``): the (B, V)
-    logits are never materialized as an output — XLA fuses the ref path,
-    the Pallas kernel keeps them in VMEM tiles on TPU.
-    """
-    from repro.kernels import ops as kernel_ops
-
-    w = lm.lm_head_weight(params, cfg).astype(cdtype(cfg))
-    if head_mode in ("reduced", "fused"):
-        # The paper's unit: comparator only — fused with the head matmul.
-        use_pallas = cfg.use_pallas or head_mode == "fused"
-        idx, _ = kernel_ops.fused_argmax_head_with_value(
-            h, w, use_pallas=use_pallas,
-            interpret=jax.default_backend() != "tpu")
-        return idx.astype(jnp.int32)
-    if head_mode == "sharded":
-        # Vocab-sharded head: per-shard fused argmax + tiny (val, idx)
-        # combine. Batch replicated (engine cohorts have ragged B).
-        from repro.parallel import env
-
-        mesh = env.current_mesh()
-        if mesh is None:
-            raise ValueError("head_mode='sharded' needs env.use_mesh(mesh)")
-        return reduced_softmax.sharded_reduced_head(
-            h, w, mesh, data_axes=(), use_pallas=cfg.use_pallas).astype(
-            jnp.int32)
-    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
-    if head_mode == "softmax":
-        # Baseline unit: exp + normalize + divide, THEN compare.
-        probs = jax.nn.softmax(logits, axis=-1)
-        return jnp.argmax(probs, axis=-1).astype(jnp.int32)
-    raise ValueError(head_mode)
-
-
-def _head_topk(params, cfg: ModelConfig, h: jax.Array, k: int,
-               head_mode: str = "reduced"):
-    """h: (B, D) -> (vals (B, k) f32, idxs (B, k) i32), logits unmaterialized.
-
-    The k-winner comparator bus: the caller samples from these k values
-    with an O(k) softmax instead of an O(V) one (``core.topk_sample`` in
-    jit, or the engine's host-side equivalent).  head_mode='fused' forces
-    the Pallas kernel, mirroring ``_head_predict``; the 'softmax' and
-    'sharded' units have no top-k form — rejected rather than silently
-    substituting the comparator (which would fake a baseline comparison).
-    """
-    if head_mode not in ("reduced", "fused"):
-        raise ValueError(f"no top-k form for head_mode={head_mode!r}")
-    w = lm.lm_head_weight(params, cfg).astype(cdtype(cfg))
-    return reduced_softmax.fused_reduced_topk(
-        h, w, k, use_pallas=cfg.use_pallas or head_mode == "fused",
-        interpret=jax.default_backend() != "tpu")
-
-
 def serve_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
-                  head_mode: str = "reduced"):
-    """Prompt pass: returns (next_token (B,), cache)."""
+                  head_mode="reduced"):
+    """Prompt pass: returns (head output (B, ...), cache).
+
+    ``head_mode``: a Sampler or a legacy string ('reduced' | 'fused' |
+    'sharded' | 'softmax' | 'temperature').
+    """
+    s = _as_sampler(head_mode, cfg)
     h, cache = lm.prefill(params, cfg, batch, max_len)
-    return _head_predict(params, cfg, h, head_mode), cache
+    return s.head(params, cfg, h), cache
 
 
 def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
-                 pos: jax.Array, head_mode: str = "reduced"):
-    """One token step: returns (next_token (B,), new_cache)."""
-    h, new_cache = lm.decode_step(params, cfg, token, cache, pos)
-    return _head_predict(params, cfg, h, head_mode), new_cache
+                 pos: jax.Array, head_mode="reduced", *,
+                 block_tables: Optional[jax.Array] = None):
+    """One token step: returns (head output (B, ...), new_cache).
+
+    With ``block_tables`` the cache's linear K/V leaves are block-paged
+    pools: the step scatters the new row into its pool block and
+    attention reads the pool through the table — no dense gather.
+    """
+    s = _as_sampler(head_mode, cfg)
+    h, new_cache = lm.decode_step(params, cfg, token, cache, pos,
+                                  block_tables=block_tables)
+    return s.head(params, cfg, h), new_cache
 
 
 def serve_topk_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
-                       k: int, head_mode: str = "reduced"):
-    """Prompt pass, k-winner head: ((vals (B,k), idxs (B,k)), cache)."""
-    h, cache = lm.prefill(params, cfg, batch, max_len)
-    return _head_topk(params, cfg, h, k, head_mode), cache
+                       k: int, head_mode="reduced"):
+    """Prompt pass, k-winner head: ((vals (B,k), idxs (B,k)), cache).
+
+    k=1 is honored (a (B, 1) comparator bus), matching the legacy
+    contract this wrapper preserves.
+    """
+    from repro.serve.sampler import TopK
+
+    return serve_prefill(params, cfg, batch, max_len,
+                         TopK(k, head_mode=head_mode))
 
 
 def serve_topk_decode(params, cfg: ModelConfig, token: jax.Array, cache,
-                      pos: jax.Array, k: int, head_mode: str = "reduced"):
+                      pos: jax.Array, k: int, head_mode="reduced", *,
+                      block_tables: Optional[jax.Array] = None):
     """One token step, k-winner head: ((vals, idxs), new_cache)."""
-    h, new_cache = lm.decode_step(params, cfg, token, cache, pos)
-    return _head_topk(params, cfg, h, k, head_mode), new_cache
+    from repro.serve.sampler import TopK
+
+    return serve_decode(params, cfg, token, cache, pos,
+                        TopK(k, head_mode=head_mode),
+                        block_tables=block_tables)
 
 
 # ---------------------------------------------------------------------------

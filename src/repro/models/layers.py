@@ -155,6 +155,7 @@ def attention(
     window: Optional[int] = None,
     cache: Optional[dict] = None,       # {'k','v'}: (B, S_cache, Hkv, hd)
     cache_pos: Optional[jax.Array] = None,  # scalar int32: write index base
+    block_tables: Optional[jax.Array] = None,  # (B, nb) i32: paged decode
     return_kv: bool = False,
     use_flash: bool = False,            # Pallas flash kernel (fwd-only paths)
 ) -> tuple[jax.Array, Optional[dict]]:
@@ -166,6 +167,11 @@ def attention(
       cache + cache_pos         update-then-attend (decode). Ring-buffer
                                 layout when S_cache == window, else linear.
                                 extra = new cache dict.
+      cache + cache_pos +       block-paged decode: cache holds the SHARED
+        block_tables            pools (num_blocks, block_size, Hkv, hd); the
+                                new row is scattered into its pool block and
+                                attention reads the pool through the table —
+                                no dense per-step gather.  extra = new pools.
       cache, cache_pos=None     read-only cache (cross-attention); extra=None.
     """
     dt = x.dtype
@@ -191,6 +197,33 @@ def attention(
         k = apply_rope(k, positions, cfg.rope_theta)
     # cache entries hold post-norm, post-rope K (what decode appends)
     new_kv = None if read_only else (k, v)
+
+    if (cache is not None and cache_pos is not None
+            and block_tables is not None and window is None):
+        # Block-paged decode (T == 1): scatter the new K/V row into its
+        # pool block, then attend straight off the pool via the block
+        # table (online softmax over valid blocks only).  Paging covers
+        # the UNBOUNDED linear KV only — a windowed layer's ring buffer
+        # (B, window, Hkv, hd) is shape-indistinguishable from a pool,
+        # so the window guard here keeps a stray block_tables from
+        # scattering into ring rows; windowed layers fall through to the
+        # ring path below and ignore the table (matching PagedKVStore,
+        # which never pages windowed configs).  The pool is shared
+        # across slots and replicated across devices, so the
+        # decode_shard_constraints pins for the per-slot dense cache do
+        # not apply here.
+        bs = cache["k"].shape[1]
+        blk = jnp.take(block_tables, cache_pos // bs, axis=1)       # (B,)
+        off = cache_pos % bs
+        ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+        from repro.kernels import ops as kernel_ops
+
+        o = kernel_ops.paged_attention(
+            q[:, 0], ck, cv, block_tables, cache_pos,
+            use_pallas=cfg.use_pallas)
+        out = o.reshape(B, 1, hq * hd).astype(dt)
+        return out @ p["wo"].astype(dt), {"k": ck, "v": cv}
 
     extra = None
     if cache is not None and cache_pos is not None:

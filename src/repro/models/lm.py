@@ -182,7 +182,7 @@ def build_cache_from_kv(k: jax.Array, v: jax.Array, cfg: ModelConfig,
 
 def _apply_layer(p, x, cfg: ModelConfig, kind: str, *, positions,
                  enc_out=None, cache=None, cache_pos=None, mode="train",
-                 max_len: int = 0):
+                 max_len: int = 0, block_tables=None):
     """Returns (x, new_cache_or_None, aux_loss).
 
     mode='prefill' runs cache-less attention and BUILDS the decode cache
@@ -210,7 +210,8 @@ def _apply_layer(p, x, cfg: ModelConfig, kind: str, *, positions,
         p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
         positions=positions, causal=(kind != "enc"),
         window=(window if kind != "enc" else None),
-        cache=attn_cache, cache_pos=cache_pos, return_kv=prefill,
+        cache=attn_cache, cache_pos=cache_pos, block_tables=block_tables,
+        return_kv=prefill,
         use_flash=(cfg.use_pallas and mode == "prefill"))
     x = x + a
     if prefill and extra is not None:
@@ -340,8 +341,13 @@ def _layer_cache(cfg: ModelConfig, kind: str, B: int, max_len: int):
 
 
 def _run_stack_decode(stack_params, segs, x, caches, cfg: ModelConfig, *,
-                      pos):
-    """One decode step. x: (B, 1, D). Returns (x, new_caches)."""
+                      pos, block_tables=None):
+    """One decode step. x: (B, 1, D). Returns (x, new_caches).
+
+    With ``block_tables``, linear K/V cache entries are block-paged
+    pools shared across the batch (see serve/paged_kv.py); attention
+    reads them through the table instead of a per-slot dense view.
+    """
     positions = jnp.reshape(pos, (1,))
     new_caches = []
     for seg_params, seg_cache, (unit, count) in zip(stack_params, caches,
@@ -355,7 +361,7 @@ def _run_stack_decode(stack_params, segs, x, caches, cfg: ModelConfig, *,
                     positions=positions,
                     cache=slot_cache[f"slot{j}"],
                     cache_pos=(pos if _needs_kv(kind) else None),
-                    mode="decode")
+                    mode="decode", block_tables=block_tables)
                 out_cache[f"slot{j}"] = new_c
             return h, out_cache
 
@@ -498,12 +504,19 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
-                pos: jax.Array):
+                pos: jax.Array, *, block_tables=None):
     """One decode step. token: (B, 1) int32; pos: scalar int32 (position of
-    ``token``). Returns (last_hidden (B, D), new_caches)."""
+    ``token``). Returns (last_hidden (B, D), new_caches).
+
+    ``block_tables`` (B, nb) int32 switches linear-attention cache
+    leaves to the block-paged pool layout: the step scatters each new
+    K/V row into its pool block and attends through the table — decode
+    cost scales with the sequence's real length, never ``max_len``.
+    """
     params = cast_params(params, cfg)
     x = embed_tokens(params, cfg, token)
     x, new_caches = _run_stack_decode(
-        params["decoder"], segments(cfg), x, caches, cfg, pos=pos)
+        params["decoder"], segments(cfg), x, caches, cfg, pos=pos,
+        block_tables=block_tables)
     h = final_hidden(params, cfg, x[:, 0, :])
     return h, new_caches

@@ -6,22 +6,25 @@ The inference-accelerator story of the paper, at engine level:
   - fixed B decode slots over a SHARED, BLOCK-PAGED KV pool (block table
     per slot, free-list allocator — see serve/paged_kv.py); slots free
     their blocks on EOS/max_tokens and are refilled from the queue;
+  - decode attention is PAGED-NATIVE: the jitted step hands the model
+    the pools and the cohort's block table, each layer scatters its new
+    K/V row into the right pool block and attends straight off the pool
+    (``kernels/paged_attention.py``) — there is NO per-step gather into
+    a dense (B, S, ...) cache, so per-token cost tracks the sequence's
+    real length and is independent of ``max_len``;
   - a scheduler interleaves prefill and decode: each iteration admits up
     to ``prefill_per_step`` queued requests into free slots (subject to
     block availability; an exhausted pool defers admission or preempts
     the youngest slot back to the queue), then runs one decode step per
     position-cohort of active slots;
-  - greedy sampling IS the reduced softmax unit: every decode step goes
-    through the fused comparator (``fused_argmax_head_with_value``) —
-    argmax over ``h @ W`` with the (B, V) logits never materialized; no
-    exp, no normalizing sum, no divide (Theorem 1);
-  - top-k sampling uses the k-winner comparator (``fused_topk_head``):
-    O(k) softmax over the survivors instead of O(V) over the vocab.
-
-``head_mode``: 'reduced' (fused comparator, XLA or Pallas per
-``cfg.use_pallas``), 'fused' (force the Pallas kernel), 'sharded'
-(vocab-sharded multi-chip head via ``sharded_reduced_head``; pass
-``mesh=``), 'softmax' (the full-softmax baseline unit).
+  - sampling is a ``Sampler`` object (serve/sampler.py): ``Greedy`` IS
+    the reduced softmax unit (fused comparator — argmax over ``h @ W``
+    with the (B, V) logits never materialized; no exp, no normalizing
+    sum, no divide — Theorem 1), ``TopK`` the k-winner comparator with
+    an O(k) host softmax, ``Temperature`` Gumbel-max over the logit row,
+    ``SoftmaxBaseline`` the full unit for A/B runs.  The legacy
+    ``head_mode`` string + per-request ``top_k``/``temperature`` are
+    resolved through ``sampler.resolve`` — the one string switch left.
 
 ``kv_layout='dense'`` keeps the seed engine's per-slot ``max_len`` cache
 as the byte-identical oracle the paged path is tested against.
@@ -40,78 +43,58 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.parallel import env
+from repro.serve import sampler as sampler_mod
 from repro.serve.paged_kv import PagedKVStore
-
-# The k-winner comparator unrolls k selection passes (kernel scratch is
-# (Bt, k)); beyond this bound compile time explodes and the O(k)-softmax
-# advantage over the full unit is gone anyway.
-MAX_TOP_K = 64
-
+from repro.serve.sampler import MAX_TOP_K, Sampler  # re-exported
 
 # ---------------------------------------------------------------------------
 # Jitted step bodies, shared across engine instances.
 #
-# Keyed on hashable statics (ModelConfig is a frozen dataclass) so a new
-# engine over the same config reuses compiles — benchmarks measure serving,
-# not retracing. ``mesh`` is in the key because sharded-head tracing reads
-# it from the ambient env at trace time.
+# Keyed on hashable statics (ModelConfig and Samplers are frozen
+# dataclasses) so a new engine over the same config reuses compiles —
+# benchmarks measure serving, not retracing. ``mesh`` is in the key
+# because sharded-head tracing reads it from the ambient env at trace
+# time.
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _jitted_prefill(cfg: ModelConfig, head_mode: str, top_k: int,
-                    cache_len: int, mesh):
-    if top_k > 1:
-        fn = lambda p, b: api.serve_topk_prefill(p, cfg, b, cache_len,
-                                                 top_k, head_mode)
-    else:
-        fn = lambda p, b: api.serve_prefill(p, cfg, b, cache_len,
-                                            head_mode=head_mode)
-    return jax.jit(fn)
+def _jitted_prefill(cfg: ModelConfig, sampler: Sampler, cache_len: int,
+                    mesh):
+    return jax.jit(lambda p, b: api.serve_prefill(p, cfg, b, cache_len,
+                                                  sampler))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_step(cfg: ModelConfig, head_mode: str, top_k: int, treedef,
-                 paged_mask: tuple, block_size: int, mesh):
-    """Decode-step body over the split cache: gather paged leaves by
-    block table, run the model, scatter the written row back into the
-    pool.  top_k=0 -> greedy via the fused comparator."""
+def _jitted_step(cfg: ModelConfig, sampler: Sampler, treedef,
+                 paged_mask: tuple, mesh):
+    """Decode-step body over the split cache.  Paged leaves enter the
+    model AS the shared pools (plus the cohort block table); the model
+    scatters each new row into its block and attends off the pool in
+    place — nothing here rebuilds a dense view."""
 
     def step(params, toks, pools, denses, btab, pos):
-        leaves = []
-        for m, pool, dense in zip(paged_mask, pools, denses):
-            if m:
-                g = pool[:, btab]                # (L, B, nb, bs, H, hd)
-                leaves.append(g.reshape(
-                    g.shape[0], g.shape[1], -1, *g.shape[4:]))
-            else:
-                leaves.append(dense)
+        leaves = [pool if m else dense
+                  for m, pool, dense in zip(paged_mask, pools, denses)]
         cache = jax.tree.unflatten(treedef, leaves)
-        if top_k:
-            out, new_cache = api.serve_topk_decode(
-                params, cfg, toks, cache, pos, top_k, head_mode)
-        else:
-            out, new_cache = api.serve_decode(
-                params, cfg, toks, cache, pos, head_mode=head_mode)
+        out, new_cache = api.serve_decode(params, cfg, toks, cache, pos,
+                                          sampler, block_tables=btab)
         new_pools, new_denses = [], []
-        blk = None
-        if btab is not None:
-            blk = jnp.take(btab, pos // block_size, axis=1)       # (B,)
-        for m, pool, new_leaf in zip(paged_mask, pools,
-                                     jax.tree.flatten(new_cache)[0]):
-            if m:
-                row = jax.lax.dynamic_slice_in_dim(
-                    new_leaf, pos, 1, axis=2)[:, :, 0]            # (L,B,H,hd)
-                new_pools.append(pool.at[:, blk, pos % block_size].set(
-                    row.astype(pool.dtype)))
-                new_denses.append(None)
-            else:
-                new_pools.append(None)
-                new_denses.append(new_leaf)
+        for m, leaf in zip(paged_mask, jax.tree.flatten(new_cache)[0]):
+            new_pools.append(leaf if m else None)
+            new_denses.append(None if m else leaf)
         return out, new_pools, new_denses
 
     # pools are donated: write_back unconditionally replaces store.pools
-    # with the returned arrays, so the update aliases in place instead of
-    # keeping a second full copy of the KV pool live per step.
+    # with the returned arrays, so the in-model scatter aliases in place
+    # instead of keeping a second full copy of the KV pool live per step.
     return jax.jit(step, donate_argnums=(2,))
+
+
+def _to_host(out):
+    """Pull a sampler head output to host: one device->host sync per
+    cohort, tuple-structured outputs (the k-winner bus) leaf-wise."""
+    if isinstance(out, tuple):
+        return tuple(np.asarray(o) for o in out)
+    return np.asarray(out)
 
 
 @dataclasses.dataclass
@@ -128,6 +111,9 @@ class Request:
     # (cohorting, deferral, preemption), so sampled generations are
     # reproducible per request.
     rng: Optional[np.random.Generator] = None
+    # explicit Sampler; None -> resolved at submit from the engine's
+    # head_mode plus this request's top_k/temperature.
+    sampler: Optional[Sampler] = None
 
 
 class ServeEngine:
@@ -144,8 +130,8 @@ class ServeEngine:
         self.eos_id = eos_id
         self.head_mode = head_mode
         self.mesh = mesh
-        if head_mode == "sharded" and mesh is None:
-            raise ValueError("head_mode='sharded' requires mesh=")
+        if sampler_mod.resolve(head_mode).needs_mesh and mesh is None:
+            raise ValueError(f"head_mode={head_mode!r} requires mesh=")
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)   # next write position
@@ -162,33 +148,22 @@ class ServeEngine:
         self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
                       "deferred": 0, "preemptions": 0}
 
-    def _decode_fn(self, top_k: int):
-        return _jitted_step(self.cfg, self.head_mode,
-                            0 if top_k <= 1 else top_k, self.store.treedef,
-                            tuple(self.store.paged_mask),
-                            self.store.block_size, self.mesh)
+    def _decode_fn(self, sampler: Sampler):
+        return _jitted_step(self.cfg, sampler, self.store.treedef,
+                            tuple(self.store.paged_mask), self.mesh)
 
-    def _prefill_fn(self, cache_len: int, top_k: int):
-        return _jitted_prefill(self.cfg, self.head_mode,
-                               0 if top_k <= 1 else top_k, cache_len,
-                               self.mesh)
+    def _prefill_fn(self, cache_len: int, sampler: Sampler):
+        return _jitted_prefill(self.cfg, sampler, cache_len, self.mesh)
 
     # -- queue management ----------------------------------------------------
     def submit(self, req: Request):
-        k_cap = min(MAX_TOP_K, self.cfg.vocab_size)
-        if not 1 <= req.top_k <= k_cap:
-            raise ValueError(
-                f"top_k={req.top_k} out of range [1, {k_cap}] "
-                f"(min(MAX_TOP_K={MAX_TOP_K}, vocab_size="
-                f"{self.cfg.vocab_size}))")
-        if req.top_k > 1 and self.head_mode not in ("reduced", "fused"):
-            # top-k sampling always runs the k-winner comparator; the
-            # 'softmax' baseline and 'sharded' head have no top-k form
-            # yet — reject rather than silently substituting the reduced
-            # path (which would fake any baseline comparison).
-            raise ValueError(
-                f"top_k sampling is not implemented for head_mode="
-                f"{self.head_mode!r}; use 'reduced' or 'fused'")
+        if req.sampler is None:
+            req.sampler = sampler_mod.resolve(
+                self.head_mode, req.top_k, req.temperature, cfg=self.cfg)
+        else:
+            req.sampler.validate(self.cfg)
+        if req.sampler.needs_mesh and self.mesh is None:
+            raise ValueError(f"{req.sampler} requires an engine mesh=")
         if len(req.prompt) > self.max_len - 1:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds max_len-1="
@@ -219,11 +194,11 @@ class ServeEngine:
             self.queue.popleft()
             plen = self.store.prefill_len(S)
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-            fn = self._prefill_fn(plen, req.top_k)
+            fn = self._prefill_fn(plen, req.sampler.device_form())
             with env.use_mesh(self.mesh):
                 out, cache1 = fn(self.params, batch)
             self.stats["prefills"] += 1
-            req.generated.append(self._pick(req, out))
+            req.generated.append(req.sampler.pick(_to_host(out), 0, req.rng))
             self.store.admit(i, jax.tree.flatten(cache1)[0], S)
             self.slots[i] = req
             self.slot_pos[i] = S
@@ -231,21 +206,6 @@ class ServeEngine:
             self._check_done(i)
             if budget is not None:
                 budget -= 1
-
-    def _pick(self, req: Request, out, row: int = 0) -> int:
-        """Turn a head output into a token id: greedy comparator output
-        directly, or an O(k) softmax sample over the top-k survivors."""
-        if req.top_k <= 1:
-            return int(out[row])
-        vals, idxs = out
-        vals = np.asarray(vals[row], np.float32)
-        idxs = np.asarray(idxs[row])
-        if req.temperature <= 0.0:
-            return int(idxs[0])
-        z = vals / req.temperature
-        p = np.exp(z - z.max())
-        p /= p.sum()
-        return int(req.rng.choice(idxs, p=p))
 
     def _preempt_youngest(self, keep: int) -> bool:
         """Pool exhausted mid-decode: push the most recently admitted slot
@@ -285,13 +245,15 @@ class ServeEngine:
                     f"{self.store.allocator.num_blocks} x "
                     f"{self.store.block_size}-token blocks is too small")
             return bool(self.queue)
-        # Slots decode at their own positions; cohorts share (pos, top_k)
-        # so one jitted call serves each group.
+        # Slots decode at their own positions; cohorts share
+        # (pos, device-form sampler) so one jitted call serves each group
+        # — host-only fields (temperature) never fragment a cohort.
         cohorts: Dict[tuple, list] = {}
         for i in active:
-            k = self.slots[i].top_k if self.slots[i].top_k > 1 else 0
-            cohorts.setdefault((int(self.slot_pos[i]), k), []).append(i)
-        for (pos, k), idxs in sorted(cohorts.items()):
+            dev = self.slots[i].sampler.device_form()
+            cohorts.setdefault((int(self.slot_pos[i]), dev), []).append(i)
+        for (pos, dev), idxs in sorted(
+                cohorts.items(), key=lambda kv: (kv[0][0], repr(kv[0][1]))):
             idxs = [i for i in idxs if self._ensure_blocks(i, pos)]
             # a later member's ensure may have PREEMPTED an earlier
             # accepted member (keep= only shields the current slot):
@@ -302,25 +264,18 @@ class ServeEngine:
             # Bucket batch and block-view sizes to powers of two so decode
             # compiles O(log n_slots * log max_blocks) shapes, not one per
             # (cohort, seq-length) pair. Padding rows duplicate row 0
-            # (identical compute; the duplicate write-back lands the same
-            # value on the same block); padding block columns repeat a
-            # valid block whose rows the kv_pos<=pos mask discards.
+            # (identical compute; the duplicate write lands the same value
+            # on the same pool cell); padding block columns repeat a valid
+            # block whose rows the kv_pos<=pos mask discards.
             n_real = len(idxs)
             padded = idxs + [idxs[0]] * ((1 << (n_real - 1).bit_length())
                                          - n_real)
             toks = np.array([[self.slots[i].generated[-1]] for i in padded],
                             np.int32)
             btab = self.store.block_table(padded, pos)
-            if btab is not None:
-                nb = btab.shape[1]
-                nbb = 1 << (nb - 1).bit_length()
-                if nbb > nb:
-                    btab = np.concatenate(
-                        [btab, np.repeat(btab[:, :1], nbb - nb, axis=1)],
-                        axis=1)
             denses = self.store.dense_sub(padded)
             with env.use_mesh(self.mesh):
-                out, new_pools, new_denses = self._decode_fn(k or 1)(
+                out, new_pools, new_denses = self._decode_fn(dev)(
                     self.params, jnp.asarray(toks), self.store.pools,
                     denses, btab, jnp.int32(pos))
             self.stats["decode_steps"] += 1
@@ -328,11 +283,10 @@ class ServeEngine:
                 idxs, new_pools,
                 [None if d is None else d[:, :n_real] for d in new_denses])
             # one device->host sync per cohort, not per slot
-            out = tuple(np.asarray(o) for o in out) if isinstance(
-                out, tuple) else np.asarray(out)
+            out = _to_host(out)
             for j, i in enumerate(idxs):
-                self.slots[i].generated.append(
-                    self._pick(self.slots[i], out, row=j))
+                req = self.slots[i]
+                req.generated.append(req.sampler.pick(out, j, req.rng))
                 self.slot_pos[i] += 1
                 self._check_done(i)
         return True

@@ -8,9 +8,11 @@ blocks drawn from one shared pool:
   - per slot, a BLOCK TABLE maps view positions ``[b * block_size, ...)``
     to pool blocks; blocks are allocated on demand as the sequence grows
     and returned to the FREE LIST the moment the request completes;
-  - decode gathers exactly ``ceil((pos+1)/block_size)`` blocks per slot,
-    so attention reads scale with the sequence's real length, not
-    ``max_len``;
+  - decode attention reads the pool IN PLACE through the block table
+    (``kernels/paged_attention.py``) over exactly
+    ``ceil((pos+1)/block_size)`` blocks per slot, so reads scale with
+    the sequence's real length, not ``max_len`` — and nothing ever
+    copies the pool into a dense per-step view;
   - non-linear cache state is NOT paged: sliding-window ring buffers are
     already O(window), recurrent (RG-LRU / RWKV) state is O(1), and
     cross-attention K/V is read-only — those stay dense per-slot.
@@ -188,14 +190,28 @@ class PagedKVStore:
         self.slot_blocks[slot] = []
 
     # -- cohort views --------------------------------------------------------
-    def block_table(self, idxs, pos: int) -> Optional[np.ndarray]:
+    def block_table(self, idxs, pos: int, *,
+                    pad_pow2: bool = True) -> Optional[np.ndarray]:
         """(B, nb) int32 table covering positions [0, pos] for the cohort
-        (every slot at the same pos owns the same block count)."""
+        (every slot at the same pos owns the same block count).
+
+        ``pad_pow2`` pads the column count to the next power of two by
+        repeating each row's first block, so decode compiles O(log
+        max_blocks) shapes; the repeated columns sit past ``pos`` and
+        the kv_pos<=pos mask discards them.
+        """
         if not self.any_paged:
             return None
         nb = pos // self.block_size + 1
-        return np.asarray(
+        btab = np.asarray(
             [self.slot_blocks[i][:nb] for i in idxs], np.int32)
+        if pad_pow2:
+            nbb = 1 << (nb - 1).bit_length()
+            if nbb > nb:
+                btab = np.concatenate(
+                    [btab, np.repeat(btab[:, :1], nbb - nb, axis=1)],
+                    axis=1)
+        return btab
 
     def dense_sub(self, idxs):
         """Cohort slices of the dense leaves (None where paged)."""

@@ -1,0 +1,256 @@
+"""Sampler protocol: every head variant behind one two-method interface.
+
+The engine, the model API and the CLI used to switch on ``head_mode``
+strings in three different places (plus a parallel ``top_k`` fork).  A
+``Sampler`` replaces all of that with two methods:
+
+  head(params, cfg, h)   device-side: turn the final hidden state
+                         (B, D) into whatever compact output the host
+                         needs — a token id, a (vals, idxs) comparator
+                         bus, or a logit row.  Traced under jit; the
+                         sampler object itself is the jit cache key.
+  pick(out, row, rng)    host-side: turn ``out`` row ``row`` into a
+                         token id, consuming the request's numpy RNG
+                         for stochastic samplers.
+
+Samplers are FROZEN dataclasses — hashable, so jitted step bodies are
+cached per sampler.  ``device_form()`` strips host-only fields
+(temperature) so requests that differ only in host-side sampling share
+one compiled step and one engine cohort.
+
+The paper mapping:
+
+  Greedy            the reduced unit: fused argmax comparator (Pallas
+                    kernel / XLA ref / vocab-sharded multi-chip form).
+                    Zero exp, zero sum, zero divide (Theorem 1).
+  TopK              the k-winner comparator bus + an O(k) host softmax
+                    over the survivors instead of O(V) over the vocab.
+  Temperature       full-distribution sampling WITHOUT a softmax: the
+                    head ships the f32 logit row and the host perturbs
+                    with Gumbel noise and takes argmax (Gumbel-max
+                    trick) — sampling as a comparator decision, the
+                    reduced unit's answer to "but I need probabilities".
+                    O(V) transfer: prefer TopK when k suffices.
+  SoftmaxBaseline   the full softmax unit (exp + normalize + divide,
+                    THEN compare) — the A/B baseline the paper beats.
+
+``resolve()`` is the ONE remaining string switch: it maps the legacy
+``head_mode`` / ``top_k`` / ``temperature`` triple (CLI flags, old call
+sites) onto a Sampler and validates it against the config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import reduced_softmax
+from repro.models import lm
+from repro.models.layers import cdtype
+
+# The k-winner comparator unrolls k selection passes (kernel scratch is
+# (Bt, k)); beyond this bound compile time explodes and the O(k)-softmax
+# advantage over the full unit is gone anyway.
+MAX_TOP_K = 64
+
+
+def _head_weight(params, cfg: ModelConfig):
+    return lm.lm_head_weight(params, cfg).astype(cdtype(cfg))
+
+
+class Sampler:
+    """Base protocol.  Subclasses are frozen dataclasses (hashable)."""
+
+    def head(self, params, cfg: ModelConfig, h: jax.Array):
+        """Device-side: (B, D) hidden -> compact head output."""
+        raise NotImplementedError
+
+    def pick(self, out, row: int, rng=None) -> int:
+        """Host-side: head output row -> token id."""
+        raise NotImplementedError
+
+    def validate(self, cfg: ModelConfig) -> None:
+        """Raise ValueError for configurations this sampler cannot serve."""
+
+    def device_form(self) -> "Sampler":
+        """The sampler with host-only fields canonicalized: requests that
+        differ only host-side share one compiled step / engine cohort."""
+        return self
+
+    @property
+    def needs_mesh(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Greedy(Sampler):
+    """argmax via the reduced comparator — the paper's unit.
+
+    head_mode: 'reduced' (fused comparator; Pallas per cfg.use_pallas),
+    'fused' (force the Pallas kernel), 'sharded' (vocab-sharded
+    multi-chip comparator; needs an ambient mesh).
+    """
+    head_mode: str = "reduced"
+
+    @property
+    def needs_mesh(self) -> bool:
+        return self.head_mode == "sharded"
+
+    def validate(self, cfg: ModelConfig) -> None:
+        if self.head_mode not in ("reduced", "fused", "sharded"):
+            raise ValueError(f"Greedy head_mode={self.head_mode!r}: "
+                             "expected 'reduced', 'fused' or 'sharded'")
+
+    def head(self, params, cfg: ModelConfig, h: jax.Array):
+        from repro.kernels import ops as kernel_ops
+
+        w = _head_weight(params, cfg)
+        if self.head_mode == "sharded":
+            # Vocab-sharded head: per-shard fused argmax + tiny (val,
+            # idx) combine. Batch replicated (engine cohorts are ragged).
+            from repro.parallel import env
+
+            mesh = env.current_mesh()
+            if mesh is None:
+                raise ValueError(
+                    "head_mode='sharded' needs env.use_mesh(mesh)")
+            return reduced_softmax.sharded_reduced_head(
+                h, w, mesh, data_axes=(),
+                use_pallas=cfg.use_pallas).astype(jnp.int32)
+        idx, _ = kernel_ops.fused_argmax_head_with_value(
+            h, w, use_pallas=cfg.use_pallas or self.head_mode == "fused")
+        return idx.astype(jnp.int32)
+
+    def pick(self, out, row: int, rng=None) -> int:
+        return int(out[row])
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxBaseline(Sampler):
+    """The full softmax unit: exp + normalize + divide, THEN compare."""
+
+    def head(self, params, cfg: ModelConfig, h: jax.Array):
+        logits = jnp.dot(h, _head_weight(params, cfg),
+                         preferred_element_type=jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.argmax(probs, axis=-1).astype(jnp.int32)
+
+    def pick(self, out, row: int, rng=None) -> int:
+        return int(out[row])
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Sampler):
+    """k-winner comparator bus + O(k) host softmax over the survivors.
+
+    temperature <= 0 degenerates to the greedy comparator exactly
+    (survivor 0 is the argmax, lowest index among ties).
+    """
+    k: int
+    temperature: float = 1.0
+    head_mode: str = "reduced"
+
+    def validate(self, cfg: ModelConfig) -> None:
+        k_cap = min(MAX_TOP_K, cfg.vocab_size)
+        if not 1 <= self.k <= k_cap:
+            raise ValueError(
+                f"top_k={self.k} out of range [1, {k_cap}] "
+                f"(min(MAX_TOP_K={MAX_TOP_K}, vocab_size="
+                f"{cfg.vocab_size}))")
+        if self.head_mode not in ("reduced", "fused"):
+            # the 'softmax' baseline and 'sharded' head have no top-k
+            # form yet — reject rather than silently substituting the
+            # reduced path (which would fake any baseline comparison).
+            raise ValueError(
+                f"top_k sampling is not implemented for head_mode="
+                f"{self.head_mode!r}; use 'reduced' or 'fused'")
+
+    def device_form(self) -> "Sampler":
+        return dataclasses.replace(self, temperature=1.0)
+
+    def head(self, params, cfg: ModelConfig, h: jax.Array):
+        return reduced_softmax.fused_reduced_topk(
+            h, _head_weight(params, cfg), self.k,
+            use_pallas=cfg.use_pallas or self.head_mode == "fused")
+
+    def pick(self, out, row: int, rng=None) -> int:
+        vals, idxs = out
+        vals = np.asarray(vals[row], np.float32)
+        idxs = np.asarray(idxs[row])
+        if self.temperature <= 0.0:
+            return int(idxs[0])
+        z = vals / self.temperature
+        p = np.exp(z - z.max())
+        p /= p.sum()
+        return int(rng.choice(idxs, p=p))
+
+
+@dataclasses.dataclass(frozen=True)
+class Temperature(Sampler):
+    """Full-vocab sampling via the Gumbel-max trick — still no softmax.
+
+    The head ships the f32 logit row; the host adds Gumbel noise scaled
+    by the temperature and takes argmax.  argmax(logits/T + G) samples
+    exactly softmax(logits/T) — a comparator decision over perturbed
+    logits, zero exp/sum/divide on the device.  temperature <= 0
+    degenerates to plain argmax (lowest index among ties, matching the
+    fused comparator).  Costs an O(V) device->host row per step; prefer
+    TopK when k survivors suffice.
+    """
+    temperature: float = 1.0
+
+    def device_form(self) -> "Sampler":
+        return dataclasses.replace(self, temperature=1.0)
+
+    def head(self, params, cfg: ModelConfig, h: jax.Array):
+        return jnp.dot(h, _head_weight(params, cfg),
+                       preferred_element_type=jnp.float32)
+
+    def pick(self, out, row: int, rng=None) -> int:
+        logits = np.asarray(out[row], np.float32)
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits))
+        g = rng.gumbel(size=logits.shape)
+        return int(np.argmax(logits / self.temperature + g))
+
+
+def resolve(spec: Union[str, Sampler], top_k: int = 1,
+            temperature: float = 1.0, *,
+            cfg: Optional[ModelConfig] = None) -> Sampler:
+    """Map a head spec onto a Sampler — the one string switch left.
+
+    ``spec`` is either a Sampler (returned as-is, validated) or a legacy
+    ``head_mode`` string: 'reduced' | 'fused' | 'sharded' | 'softmax' |
+    'temperature'.  ``top_k > 1`` selects the k-winner bus where the
+    head supports it.  Pass ``cfg`` to validate against the model.
+    """
+    if isinstance(spec, Sampler):
+        s = spec
+    elif top_k < 1:
+        # the seed engine rejected any top_k outside [1, cap]; keep the
+        # low edge loud rather than silently serving greedy
+        raise ValueError(f"top_k={top_k} out of range [1, "
+                         f"{MAX_TOP_K}]: must be >= 1")
+    elif spec == "softmax":
+        if top_k > 1:
+            raise ValueError(
+                "top_k sampling is not implemented for head_mode="
+                "'softmax'; use 'reduced' or 'fused'")
+        s = SoftmaxBaseline()
+    elif spec == "temperature":
+        if top_k > 1:
+            raise ValueError(
+                "head_mode='temperature' samples the full vocab; "
+                "combine top_k with 'reduced' or 'fused' instead")
+        s = Temperature(temperature)
+    elif spec in ("reduced", "fused", "sharded"):
+        s = (TopK(top_k, temperature, spec) if top_k > 1 else Greedy(spec))
+    else:
+        raise ValueError(f"unknown head spec {spec!r}")
+    if cfg is not None:
+        s.validate(cfg)
+    return s

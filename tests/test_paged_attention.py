@@ -1,0 +1,264 @@
+"""Paged-attention-native decode + the Sampler protocol.
+
+Property tests (hypothesis, or the deterministic shim on bare envs):
+
+  - paged attention == dense attention over the same K/V, across ragged
+    lengths, block sizes and GQA group widths — at the op level (the
+    ref twin vs an independently-built dense view) and at the kernel
+    level (Pallas interpret vs the ref twin);
+  - engine-level: paged == dense generations across random traces,
+    block-boundary prompt lengths, and post-preemption re-prefill;
+  - every Sampler at temperature -> 0 equals the fused argmax
+    comparator (Theorem 1), including lowest-index tie-breaking.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # bare env: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import ARCHS, smoke_config
+from repro.kernels import ops, ref
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampler import (
+    Greedy,
+    SoftmaxBaseline,
+    Temperature,
+    TopK,
+    resolve,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk(arch="qwen3-0.6b", key=KEY):
+    cfg = smoke_config(ARCHS[arch])
+    return cfg, lm.init_params(cfg, key)
+
+
+def _pool_case(rng, pos, bs, g, hkv=2, hd=16, b=3, spare=3):
+    """Random pools + per-row block tables covering [0, pos]."""
+    nb = pos // bs + 1
+    nblocks = b * nb + spare
+    q = jnp.asarray(rng.normal(size=(b, g * hkv, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nblocks, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nblocks, bs, hkv, hd)), jnp.float32)
+    bt = np.stack([rng.choice(nblocks, nb, replace=False) for _ in range(b)])
+    return q, kp, vp, jnp.asarray(bt, jnp.int32)
+
+
+def _dense_view_attention(q, kp, vp, bt, pos, max_len):
+    """Independent oracle: scatter the blocks into a (B, max_len) dense
+    cache and run plain masked softmax attention over it."""
+    b, hq, hd = q.shape
+    bs, hkv = kp.shape[1], kp.shape[2]
+    nb = bt.shape[1]
+    k = np.zeros((b, max_len, hkv, hd), np.float32)
+    v = np.zeros((b, max_len, hkv, hd), np.float32)
+    for i in range(b):
+        for j in range(nb):
+            k[i, j * bs:(j + 1) * bs] = np.asarray(kp)[bt[i, j]]
+            v[i, j * bs:(j + 1) * bs] = np.asarray(vp)[bt[i, j]]
+    g = hq // hkv
+    qg = np.asarray(q).reshape(b, hkv, g, hd)
+    sc = np.einsum("bkgh,bskh->bkgs", qg, k) / np.sqrt(hd)
+    sc = np.where((np.arange(max_len) <= pos)[None, None, None, :],
+                  sc, -np.inf)
+    pr = np.exp(sc - sc.max(-1, keepdims=True))
+    pr /= pr.sum(-1, keepdims=True)
+    return np.einsum("bkgs,bskh->bkgh", pr, v).reshape(b, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Op level: ref twin and Pallas kernel vs an independent dense view
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=47),
+       st.sampled_from([4, 8, 16]),
+       st.sampled_from([1, 2, 4]))
+def test_paged_ref_matches_dense_view(pos, bs, g):
+    rng = np.random.default_rng([pos, bs, g])
+    q, kp, vp, bt = _pool_case(rng, pos, bs, g)
+    got = np.asarray(ref.paged_attention(q, kp, vp, bt, jnp.int32(pos)))
+    want = _dense_view_attention(q, kp, vp, np.asarray(bt), pos,
+                                 max_len=(pos // bs + 1) * bs)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=40),
+       st.sampled_from([4, 8]),
+       st.sampled_from([1, 2]))
+def test_paged_kernel_matches_ref(pos, bs, g):
+    rng = np.random.default_rng([7, pos, bs, g])
+    q, kp, vp, bt = _pool_case(rng, pos, bs, g)
+    # pad the table to a pow-2 column count like the engine does: the
+    # repeated columns sit past pos and the mask must discard them
+    nb = bt.shape[1]
+    nbb = 1 << (nb - 1).bit_length()
+    btp = jnp.concatenate(
+        [bt, jnp.repeat(bt[:, :1], nbb - nb, axis=1)], axis=1)
+    r = np.asarray(ref.paged_attention(q, kp, vp, btp, jnp.int32(pos)))
+    p = np.asarray(ops.paged_attention(q, kp, vp, btp, jnp.int32(pos),
+                                       use_pallas=True, interpret=True))
+    np.testing.assert_allclose(p, r, rtol=2e-5, atol=2e-6)
+
+
+def test_paged_kernel_block_boundaries():
+    """Exact block-boundary positions: last row of a block, first row of
+    the next, single-block, and pow-2-padded tables."""
+    bs = 8
+    for pos in (0, bs - 1, bs, 2 * bs - 1, 2 * bs, 3 * bs):
+        rng = np.random.default_rng(pos)
+        q, kp, vp, bt = _pool_case(rng, pos, bs, g=2)
+        r = np.asarray(ref.paged_attention(q, kp, vp, bt, jnp.int32(pos)))
+        p = np.asarray(ops.paged_attention(q, kp, vp, bt, jnp.int32(pos),
+                                           use_pallas=True, interpret=True))
+        np.testing.assert_allclose(p, r, rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: paged == dense generations (the tokens are the contract)
+# ---------------------------------------------------------------------------
+def _run(params, cfg, prompts, max_new=5, **kw):
+    eng = ServeEngine(params, cfg, eos_id=1, **kw)
+    reqs = [Request(i, p.copy(), max_new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [r.generated for r in reqs], eng
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.lists(st.integers(min_value=3, max_value=25),
+                min_size=2, max_size=4),
+       st.sampled_from([4, 8]))
+def test_engine_paged_equals_dense_ragged(plens, bs):
+    cfg, params = _mk()
+    rng = np.random.default_rng([bs] + list(plens))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in plens]
+    dense, _ = _run(params, cfg, prompts, max_new=5,
+                    n_slots=2, max_len=48, kv_layout="dense")
+    paged, eng = _run(params, cfg, prompts, max_new=5,
+                      n_slots=2, max_len=48, kv_layout="paged",
+                      block_size=bs)
+    assert paged == dense
+    assert eng.store.allocator.n_free == eng.store.allocator.num_blocks
+
+
+def test_engine_block_boundary_prompts():
+    """Prompt lengths straddling block boundaries; generation crosses
+    further boundaries mid-decode."""
+    cfg, params = _mk()
+    bs = 8
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (bs - 1, bs, bs + 1, 2 * bs)]
+    dense, _ = _run(params, cfg, prompts, max_new=2 * bs + 2,
+                    n_slots=2, max_len=64, kv_layout="dense")
+    paged, _ = _run(params, cfg, prompts, max_new=2 * bs + 2,
+                    n_slots=2, max_len=64, kv_layout="paged", block_size=bs)
+    assert paged == dense
+
+
+def test_engine_post_preemption_reprefill_matches():
+    """A pool sized for one full sequence forces preempt -> re-prefill;
+    the re-prefilled request must continue token-exactly."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)
+               for _ in range(3)]
+    dense, _ = _run(params, cfg, prompts, max_new=14,
+                    n_slots=2, max_len=64, kv_layout="dense")
+    tight, eng = _run(params, cfg, prompts, max_new=14,
+                      n_slots=2, max_len=64, kv_layout="paged",
+                      block_size=8, num_blocks=5)
+    assert tight == dense
+    assert eng.stats["preemptions"] >= 1
+    assert eng.store.allocator.n_free == 5
+
+
+# ---------------------------------------------------------------------------
+# Sampler protocol: temperature -> 0 IS the comparator (Theorem 1)
+# ---------------------------------------------------------------------------
+def _tied_head_params(cfg, params, dup_pairs):
+    """Duplicate lm_head columns so those vocab ids tie EXACTLY."""
+    w = np.array(lm.lm_head_weight(params, cfg))
+    for lo, hi in dup_pairs:
+        w[:, hi] = w[:, lo]
+    p = dict(params)
+    if cfg.tie_embeddings:
+        p["embed"] = jnp.asarray(w.T)
+    else:
+        p["lm_head"] = jnp.asarray(w)
+    return p
+
+
+@pytest.mark.parametrize("sampler", [
+    Greedy(), Greedy("fused"), SoftmaxBaseline(),
+    TopK(8, temperature=0.0), TopK(8, temperature=-1.0),
+    Temperature(0.0), Temperature(-1.0),
+])
+def test_every_sampler_at_t0_is_the_comparator(sampler):
+    """head() + pick() at temperature <= 0 == argmax of the logits, with
+    exactly tied columns resolving to the LOWEST vocab index — the fused
+    comparator's contract, uniform across the whole Sampler zoo."""
+    cfg, params = _mk()
+    params = _tied_head_params(cfg, params, [(5, 99), (5, 200)])
+    rng = np.random.default_rng(31)
+    w = np.asarray(lm.lm_head_weight(params, cfg), np.float32)
+    h = rng.normal(size=(6, cfg.d_model)).astype(np.float32)
+    h[-1] = 8.0 * w[:, 5]       # forces the 3-way tie {5, 99, 200} to win
+    h = jnp.asarray(h)
+    want = np.argmax(np.asarray(h) @ w, axis=-1)
+    assert want[-1] == 5        # argmax oracle itself picks the lowest id
+
+    out = sampler.head(params, cfg, h)
+    out = tuple(np.asarray(o) for o in out) if isinstance(out, tuple) \
+        else np.asarray(out)
+    got = [sampler.pick(out, row, np.random.default_rng(0))
+           for row in range(h.shape[0])]
+    np.testing.assert_array_equal(got, want)
+    assert 99 not in got and 200 not in got
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=2, max_value=32))
+def test_topk_head_prefix_of_comparator(k):
+    """The k-winner bus's survivor 0 is the argmax for every k."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(41)
+    h = jnp.asarray(rng.normal(size=(4, cfg.d_model)), jnp.float32)
+    s = TopK(k, temperature=0.0)
+    vals, idxs = s.head(params, cfg, h)
+    w = np.asarray(lm.lm_head_weight(params, cfg), np.float32)
+    want = np.argmax(np.asarray(h) @ w, axis=-1)
+    np.testing.assert_array_equal(np.asarray(idxs)[:, 0], want)
+
+
+def test_resolve_is_the_only_string_switch():
+    """resolve() maps every legacy head_mode/top_k/temperature triple and
+    rejects the combinations the engine used to guard inline."""
+    cfg, _ = _mk()
+    assert resolve("reduced") == Greedy("reduced")
+    assert resolve("fused", top_k=4, temperature=0.5) == \
+        TopK(4, 0.5, "fused")
+    assert resolve("softmax") == SoftmaxBaseline()
+    assert resolve("temperature", temperature=0.7) == Temperature(0.7)
+    assert resolve(Temperature(0.3)) == Temperature(0.3)
+    with pytest.raises(ValueError, match="top_k"):
+        resolve("reduced", top_k=500, cfg=cfg)
+    with pytest.raises(ValueError, match="top_k sampling"):
+        resolve("softmax", top_k=4, cfg=cfg)
+    with pytest.raises(ValueError, match="top_k sampling"):
+        resolve("sharded", top_k=4, cfg=cfg)
+    # host-only fields never fragment a cohort / jit cache
+    assert TopK(4, 0.9).device_form() == TopK(4, 1.0).device_form()
+    assert Temperature(0.1).device_form() == Temperature(2.0).device_form()
