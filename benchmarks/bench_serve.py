@@ -1,6 +1,8 @@
 """Serving benchmark: the reduced head vs the full-softmax head through
 the continuous-batching engine, across slot counts and a mixed
-prompt-length workload — plus the paged-decode flatness probe.
+prompt-length workload — plus the paged-decode flatness probe and the
+RAGGED sweep (fused one-step-per-iteration scheduler vs the PR 2
+position-cohort baseline on staggered lengths and mixed samplers).
 
 For each n_slots the same request trace (mixed short/medium/long prompts)
 is served by:
@@ -70,21 +72,19 @@ def run(arch="qwen3-0.6b", slot_counts=(2, 4, 8), n_requests=16,
     cfg = smoke_config(ARCHS[arch])
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     prompts = make_trace(cfg, n_requests, max_new)
-    # warmup: serve the FULL trace once per (head, layout) at the largest
-    # slot count so every prefill-length bucket and pow-2 cohort shape
-    # compiles before the timed region (smaller slot counts produce a
-    # subset of these shapes).
-    for head_mode, kv_layout in (("reduced", "paged"), ("softmax", "paged"),
-                                 ("reduced", "dense")):
-        serve_trace(params, cfg, prompts, n_slots=max(slot_counts),
-                    max_new=max_new, head_mode=head_mode,
-                    kv_layout=kv_layout, max_len=max_len)
     rows = []
     for n_slots in slot_counts:
         res = {}
         for head_mode, kv_layout in (("reduced", "paged"),
                                      ("softmax", "paged"),
                                      ("reduced", "dense")):
+            # warmup: serve the FULL trace once untimed at THIS config —
+            # the paged-native prefill and the fused step are jitted
+            # against the pool/dense-leaf shapes, which depend on
+            # n_slots, so every shape must compile before the timed run.
+            serve_trace(params, cfg, prompts, n_slots=n_slots,
+                        max_new=max_new, head_mode=head_mode,
+                        kv_layout=kv_layout, max_len=max_len)
             res[(head_mode, kv_layout)] = serve_trace(
                 params, cfg, prompts, n_slots=n_slots, max_new=max_new,
                 head_mode=head_mode, kv_layout=kv_layout, max_len=max_len)
@@ -152,6 +152,91 @@ def latency_vs_max_len(arch="qwen3-0.6b", max_lens=(64, 128, 256, 512),
     return rows
 
 
+def ragged_sweep(arch="qwen3-0.6b", n_requests=12, max_new=10, max_len=96,
+                 n_slots=4, verbose=True):
+    """Ragged workload A/B: staggered prompt lengths (no two slots ever
+    share a position) and mixed samplers (greedy comparator / top-k bus /
+    Gumbel-max), served by
+
+      - ``scheduler='fused'``: ONE jitted decode call per engine
+        iteration over all active slots (this PR), and
+      - ``scheduler='cohort'``: one call per (position, head) group —
+        the PR 2 baseline, which on a fully staggered workload degrades
+        to ~n_slots batch≈1 calls per iteration.
+
+    Reports tok/s and jitted-calls-per-iteration for both; generations
+    are asserted identical (per-request RNG streams make sampling
+    reproducible across schedulers), and a greedy-only pass through the
+    softmax-baseline head re-checks Theorem 1 on the ragged trace.
+    """
+    from repro.serve.sampler import (
+        Greedy,
+        SoftmaxBaseline,
+        Temperature,
+        TopK,
+    )
+
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    plens = [3 + (7 * i) % 53 for i in range(n_requests)]   # staggered
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    mixers = [Greedy(), TopK(4, temperature=0.8), Temperature(0.7)]
+
+    def serve(scheduler, samplers):
+        def once():
+            eng = ServeEngine(params, cfg, n_slots=n_slots,
+                              max_len=max_len, eos_id=1,
+                              kv_layout="paged", scheduler=scheduler)
+            reqs = [Request(i, p.copy(), max_new,
+                            sampler=samplers[i % len(samplers)])
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            stats = eng.run(max_iters=10000)
+            return (time.perf_counter() - t0, stats,
+                    [r.generated for r in reqs])
+        once()                                  # warmup: compile
+        wall, stats, gens = min((once() for _ in range(3)),
+                                key=lambda r: r[0])
+        toks = sum(len(g) for g in gens)
+        return dict(wall=wall, tok_s=toks / wall,
+                    calls_per_iter=stats["decode_steps"]
+                    / max(stats["iterations"], 1),
+                    rows_per_step=stats["fused_rows"]
+                    / max(stats["decode_steps"], 1),
+                    stats={k: int(v) for k, v in stats.items()},
+                    gens=gens)
+
+    fused = serve("fused", mixers)
+    cohort = serve("cohort", mixers)
+    assert fused["gens"] == cohort["gens"], \
+        "fused != cohort generations on the ragged trace"
+    # Theorem 1 on the ragged trace: greedy rows through the comparator
+    # == through the full softmax unit, fused scheduling throughout.
+    grd = serve("fused", [Greedy()])
+    soft = serve("fused", [SoftmaxBaseline()])
+    assert grd["gens"] == soft["gens"], "reduced != softmax (ragged)"
+    for r in (fused, cohort, grd, soft):
+        r.pop("gens")
+    if verbose:
+        print(f"ragged fused : {fused['tok_s']:7.1f} tok/s  "
+              f"{fused['calls_per_iter']:.2f} jitted calls/iter  "
+              f"{fused['rows_per_step']:.2f} rows/step")
+        print(f"ragged cohort: {cohort['tok_s']:7.1f} tok/s  "
+              f"{cohort['calls_per_iter']:.2f} jitted calls/iter  "
+              f"{cohort['rows_per_step']:.2f} rows/step  (PR 2 baseline)")
+        print(f"fused speedup over cohort baseline: "
+              f"{fused['tok_s'] / cohort['tok_s']:.2f}x  "
+              f"(reduced == softmax on ragged trace: yes)")
+    return dict(n_requests=n_requests, n_slots=n_slots, max_new=max_new,
+                prompt_lens=plens, fused=fused, cohort=cohort,
+                greedy_reduced=grd, greedy_softmax=soft,
+                speedup=fused["tok_s"] / cohort["tok_s"])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -170,6 +255,10 @@ def main():
     print(f"\nbest: {best['reduced_tok_s']:.1f} tok/s at "
           f"{best['n_slots']} slots (reduced head, paged KV); "
           f"softmax-head baseline {best['softmax_tok_s']:.1f} tok/s")
+    print("\nragged workload: fused one-step-per-iteration vs the PR 2 "
+          "position-cohort baseline:")
+    ragged = ragged_sweep(arch=args.arch, n_requests=args.requests,
+                          max_new=args.max_new, max_len=args.max_len)
     print("\nper-step decode latency vs max_len (fixed sequence length):")
     sweep = latency_vs_max_len(arch=args.arch,
                                max_lens=tuple(args.max_len_sweep))
@@ -179,7 +268,8 @@ def main():
           f"max_len (1.0 = perfectly flat)")
     with open(args.out, "w") as f:
         json.dump({"arch": args.arch, "backend": jax.default_backend(),
-                   "slot_sweep": rows, "latency_vs_max_len": sweep},
+                   "slot_sweep": rows, "ragged_sweep": ragged,
+                   "latency_vs_max_len": sweep},
                   f, indent=2)
     print(f"wrote {args.out}")
 

@@ -9,6 +9,12 @@ greedy step is the fused comparator, the top-k requests only ever
 exp/normalize k values instead of the vocab, and the temperature
 requests sample by perturb-then-compare.
 
+Decode is RAGGED AND FUSED: every engine iteration is exactly ONE jitted
+step over all active slots, each at its own position, the three sampler
+kinds sharing one trunk forward (asserted below via
+``decode_steps == iterations``).  Each request reports WHY it finished
+(``finish_reason``: eos / length / max_len).
+
 The same greedy trace is then re-served through ``SoftmaxBaseline`` (the
 full softmax unit) and asserted TOKEN-IDENTICAL — Theorem 1 live.
 
@@ -62,7 +68,18 @@ def main():
     tput = stats["decode_steps"] / dt
     print(f"engine decode steps/s: {tput:.1f} "
           f"(greedy head unit: argmax only — zero exp/div, Theorem 1)")
+    print(f"fused ragged decode: {stats['decode_steps']} jitted calls over "
+          f"{stats['iterations']} iterations "
+          f"({stats['fused_rows'] / max(stats['decode_steps'], 1):.2f} "
+          "rows/step; mixed samplers + staggered positions, one call each)")
+    for r in reqs:
+        print(f"  rid={r.rid:2d} {type(r.sampler).__name__:11s} "
+              f"prompt={len(r.prompt):2d} generated={len(r.generated):2d} "
+              f"finish={r.finish_reason}")
     assert stats["completed"] == n_req
+    assert stats["decode_steps"] == stats["iterations"]  # ONE call/iter
+    assert all(r.finish_reason in ("eos", "length", "max_len")
+               for r in reqs)
     assert alloc.n_free == alloc.num_blocks  # every block returned
 
     # Theorem 1 live: the SAME trace, greedy everywhere, served through

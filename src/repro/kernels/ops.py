@@ -76,22 +76,24 @@ def fused_topk_head(h, w, k, *, use_pallas: bool = False,
     return ref.fused_topk_head(h, w, k)
 
 
-def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
+def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
                     use_pallas: bool = False,
                     interpret: Optional[bool] = None):
-    """Decode attention straight off a block-paged KV pool.
+    """Ragged decode attention straight off a block-paged KV pool.
 
     q (B, Hq, hd); pools (num_blocks, block_size, Hkv, hd); block_tables
-    (B, nb) i32; pos scalar i32 -> (B, Hq, hd).  The Pallas kernel reads
-    pool blocks in place (block table drives the index maps); the ref
-    path is the dense decode math over the gathered view — token-exact
-    against the dense cache layout.
+    (B, nb) i32; positions (B,) i32 — each row attends over its own
+    kv positions <= positions[b] (a scalar broadcasts) -> (B, Hq, hd).
+    The Pallas kernel reads pool blocks in place (block table drives the
+    index maps; the per-row position is a scalar-prefetch operand); the
+    ref path is the dense decode math over the gathered view —
+    token-exact against the dense cache layout.
     """
     use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if use_pallas:
-        return _pa.paged_attention(q, k_pool, v_pool, block_tables, pos,
-                                   interpret=interpret)
-    return ref.paged_attention(q, k_pool, v_pool, block_tables, pos)
+        return _pa.paged_attention(q, k_pool, v_pool, block_tables,
+                                   positions, interpret=interpret)
+    return ref.paged_attention(q, k_pool, v_pool, block_tables, positions)
 
 
 def online_softmax(x, *, use_pallas: bool = False,

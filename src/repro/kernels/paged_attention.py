@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: paged-attention-native decode.
+"""Pallas TPU kernel: paged-attention-native RAGGED decode.
 
 The serving engine keeps K/V in a SHARED block pool
 (``num_blocks, block_size, Hkv, hd`` per layer) with a per-slot block
@@ -10,7 +10,12 @@ the BLOCK TABLE itself drives the BlockSpec index maps (scalar
 prefetch), so each pool block is DMA'd HBM->VMEM exactly once, in
 place, and the dense view never exists anywhere.
 
-  grid = (B, nb)                      # nb = blocks covering pos
+Decode is RAGGED: every batch row sits at its OWN position (the engine
+fuses all active slots into one step regardless of where each sequence
+is), so ``positions`` is a per-row ``(B,)`` scalar-prefetch vector and
+the valid-key mask is per row: ``kv_pos <= positions[b]``.
+
+  grid = (B, nb)                      # nb = max blocks over the batch
   q     (1, Hq, hd)   indexed (b, 0, 0)
   k/v   (1, bs, Hkv, hd) indexed (btab[b, j], 0, 0, 0)   <- the trick
   out   (1, Hq, hd)   written at j == nb - 1
@@ -18,9 +23,11 @@ place, and the dense view never exists anywhere.
 Inner loop is the standard online-softmax carry (same (m, l, acc)
 recurrence as kernels/flash_attention.py), GQA-native: scores are
 computed per KV head over its ``g = Hq // Hkv`` query group, no K/V
-repeat.  Positions beyond ``pos`` (the tail of the last block, plus any
-padded block-table columns) are masked to -inf before they touch the
-carry, so arbitrary pow-2 padded tables are safe.
+repeat.  Positions beyond ``positions[b]`` (the tail of the row's last
+block, whole blocks past a short row's extent, and any padded
+block-table columns) are masked to -inf before they touch the carry, so
+ragged rows and arbitrary pow-2 padded tables are safe — a fully-masked
+block leaves the carry untouched.
 
 Validated in interpret mode against ``ref.paged_attention`` (which is
 itself the dense decode math applied to the gathered view).
@@ -41,6 +48,7 @@ _NEG_INF = float("-inf")
 def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref, *, scale: float, block_size: int,
             nb: int, g: int):
+    bi = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -63,8 +71,10 @@ def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         preferred_element_type=jnp.float32) * scale    # (Hkv, g, bs)
     s = s.reshape(hq, -1)                              # (Hq, bs)
 
+    # this row's own position: rows past it (other rows may be longer)
+    # are masked out entirely, so ragged batches share one grid.
     kv_pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = kv_pos <= pos_ref[0]
+    valid = kv_pos <= pos_ref[bi]
     s = jnp.where(valid, s, _NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
@@ -89,16 +99,20 @@ def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
+def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
                     interpret: bool = False):
     """q: (B, Hq, hd); k/v_pool: (num_blocks, bs, Hkv, hd);
-    block_tables: (B, nb) int32; pos: scalar int32.  -> (B, Hq, hd)."""
+    block_tables: (B, nb) int32; positions: (B,) int32 — each row
+    attends over its OWN kv positions <= positions[b] (a scalar
+    broadcasts to the whole batch).  -> (B, Hq, hd)."""
     b, hq, hd = q.shape
     bs, hkv = k_pool.shape[1], k_pool.shape[2]
     nb = block_tables.shape[1]
     assert hq % hkv == 0, (hq, hkv)
     g = hq // hkv
     scale = 1.0 / math.sqrt(hd)
+    positions = jnp.broadcast_to(
+        jnp.asarray(positions, jnp.int32).reshape(-1), (b,))
 
     kern = functools.partial(_kernel, scale=scale, block_size=bs,
                              nb=nb, g=g)
@@ -125,6 +139,4 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32),
-      jnp.reshape(pos, (1,)).astype(jnp.int32),
-      q, k_pool, v_pool)
+    )(block_tables.astype(jnp.int32), positions, q, k_pool, v_pool)

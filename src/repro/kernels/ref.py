@@ -91,14 +91,16 @@ def fused_xent(logits: jax.Array, labels: jax.Array):
 # ---------------------------------------------------------------------------
 # paged_attention: decode attention over a block-paged KV pool
 # ---------------------------------------------------------------------------
-def paged_attention(q, k_pool, v_pool, block_tables, pos):
-    """Decode-step attention reading K/V through a block table.
+def paged_attention(q, k_pool, v_pool, block_tables, positions):
+    """Ragged decode-step attention reading K/V through a block table.
 
-    q: (B, Hq, hd) query for the token at ``pos``;
+    q: (B, Hq, hd) per-row query for the token at ``positions[b]``;
     k_pool, v_pool: (num_blocks, block_size, Hkv, hd) SHARED pools;
     block_tables: (B, nb) int32 — row b's view position ``j`` lives in
     ``pool[block_tables[b, j // bs], j % bs]``;
-    pos: scalar int32 — attend over kv positions <= pos.
+    positions: (B,) int32 — row b attends over kv positions <=
+    ``positions[b]`` (a scalar broadcasts to the whole batch), so every
+    row can sit at its own sequence length inside one call.
 
     Returns (B, Hq, hd) in q.dtype.  The math is EXACTLY the dense decode
     attention of ``models.layers.attention`` applied to the gathered
@@ -110,12 +112,14 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos):
     b, hq, hd = q.shape
     bs, hkv = k_pool.shape[1], k_pool.shape[2]
     dt = q.dtype
+    pos = jnp.broadcast_to(
+        jnp.asarray(positions, jnp.int32).reshape(-1), (b,))
     k = jnp.take(k_pool, block_tables, axis=0).astype(dt)  # (B, nb, bs, ...)
     v = jnp.take(v_pool, block_tables, axis=0).astype(dt)
     k = k.reshape(b, -1, hkv, hd)
     v = v.reshape(b, -1, hkv, hd)
     kv_pos = jnp.arange(k.shape[1])
-    mask = (kv_pos <= pos)[None, :]                        # (1, S)
+    mask = kv_pos[None, :] <= pos[:, None]                 # (B, S) per-row
     g = hq // hkv
     qt = q[:, None]                                        # (B, 1, Hq, hd)
     if g > 1:
@@ -123,13 +127,13 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos):
         qg = qt.reshape(b, 1, hkv, g, hd)
         scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) / (hd ** 0.5)
         scores = scores.astype(jnp.float32)
-        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+        scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1).astype(dt)
         out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
         return out.reshape(b, hq, hd)
     scores = jnp.einsum("bthd,bshd->bhts", qt, k) / (hd ** 0.5)
     scores = scores.astype(jnp.float32)
-    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(dt)
     return jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, hq, hd)
 

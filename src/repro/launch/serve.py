@@ -51,6 +51,11 @@ def main():
     ap.add_argument("--top-k", type=int, default=1,
                     help=">1: top-k sampling via the k-winner comparator")
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--scheduler", default="fused",
+                    choices=["fused", "cohort"],
+                    help="fused: ONE jitted ragged decode step per "
+                         "iteration over all slots (default); cohort: "
+                         "the PR 2 position-cohort baseline")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -62,13 +67,15 @@ def main():
                                   args.temperature, cfg=cfg)
     mesh = None
     if sampler.needs_mesh:
-        # vocab-sharded head: all devices on 'model'; engine cohorts have
-        # ragged batch sizes, so the batch stays replicated.
+        # vocab-sharded head: all devices on 'model'; the fused step's
+        # batch size tracks the active-slot count, so the batch stays
+        # replicated.
         mesh = mesh_mod.make_host_mesh(model=len(jax.devices()))
     eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=args.max_len,
                       eos_id=1, head_mode=args.head_mode,
                       kv_layout=args.kv_layout, block_size=args.block_size,
-                      num_blocks=args.num_blocks, mesh=mesh, seed=args.seed)
+                      num_blocks=args.num_blocks, scheduler=args.scheduler,
+                      mesh=mesh, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, 24))
@@ -78,8 +85,10 @@ def main():
     t0 = time.perf_counter()
     stats = eng.run()
     dt = time.perf_counter() - t0
-    print(f"sampler={sampler} kv={args.kv_layout} "
+    print(f"sampler={sampler} kv={args.kv_layout} sched={args.scheduler} "
           f"served={stats['completed']} decode_steps={stats['decode_steps']} "
+          f"iterations={stats['iterations']} "
+          f"rows/step={stats['fused_rows'] / max(stats['decode_steps'], 1):.2f} "
           f"preempt={stats['preemptions']} wall={dt:.2f}s")
 
 

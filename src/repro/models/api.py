@@ -22,6 +22,10 @@ every variant lives:
 off the block-paged KV pool (no dense gather): the cache tree's linear
 K/V leaves are the shared ``(layers, num_blocks, block_size, Hkv, hd)``
 pools and the block table maps each batch row's positions onto them.
+Decode is RAGGED — ``pos`` may be a per-row ``(B,)`` vector, so one call
+serves rows at arbitrary sequence lengths.  ``serve_prefill_paged``
+makes admission paged-native: the prompt's K/V is scattered into pool
+blocks inside the jitted prefill, no host round-trip of a dense cache.
 """
 from __future__ import annotations
 
@@ -93,7 +97,9 @@ def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
                  block_tables: Optional[jax.Array] = None):
     """One token step: returns (head output (B, ...), new_cache).
 
-    With ``block_tables`` the cache's linear K/V leaves are block-paged
+    ``pos`` is a scalar or a per-row ``(B,)`` vector — ragged decode:
+    every batch row at its own position in one call.  With
+    ``block_tables`` the cache's linear K/V leaves are block-paged
     pools: the step scatters the new row into its pool block and
     attention reads the pool through the table — no dense gather.
     """
@@ -101,6 +107,42 @@ def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
     h, new_cache = lm.decode_step(params, cfg, token, cache, pos,
                                   block_tables=block_tables)
     return s.head(params, cfg, h), new_cache
+
+
+def serve_prefill_paged(params, cfg: ModelConfig, batch: dict,
+                        cache_len: int, head_mode="reduced", *,
+                        pools, blocks: jax.Array, paged_mask):
+    """Paged-native prompt pass (B = 1): prefill at the block-aligned
+    ``cache_len`` and scatter the paged K/V leaves straight into the
+    SHARED pool blocks, all inside one jitted call — the dense prefill
+    cache never round-trips through the host (the old path returned the
+    full cache, which the store then re-read, re-blocked and scattered
+    a second time).
+
+    ``pools``: the store's pool list (None where a leaf is dense);
+    ``blocks``: (nb,) int32 pool blocks freshly allocated for this slot;
+    ``paged_mask``: which cache leaves (in ``jax.tree.flatten`` order)
+    are paged.  Returns (head output, new_pools, dense_leaves) where
+    ``dense_leaves`` holds the non-paged cache leaves (ring buffers,
+    recurrent state, cross-attention K/V) for the store to copy into the
+    slot's dense row.
+    """
+    s = _as_sampler(head_mode, cfg)
+    h, cache = lm.prefill(params, cfg, batch, cache_len)
+    leaves = jax.tree.flatten(cache)[0]
+    nb = blocks.shape[0]
+    new_pools, dense_leaves = [], []
+    for m, pool, leaf in zip(paged_mask, pools, leaves):
+        if m:
+            bs = pool.shape[2]
+            view = leaf[:, 0, :nb * bs]               # (L, nb*bs, Hkv, hd)
+            blk = view.reshape(view.shape[0], nb, bs, *view.shape[2:])
+            new_pools.append(pool.at[:, blocks].set(blk.astype(pool.dtype)))
+            dense_leaves.append(None)
+        else:
+            new_pools.append(None)
+            dense_leaves.append(leaf)
+    return s.head(params, cfg, h), new_pools, dense_leaves
 
 
 def serve_topk_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,

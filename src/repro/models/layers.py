@@ -154,7 +154,9 @@ def attention(
     causal: bool = True,
     window: Optional[int] = None,
     cache: Optional[dict] = None,       # {'k','v'}: (B, S_cache, Hkv, hd)
-    cache_pos: Optional[jax.Array] = None,  # scalar int32: write index base
+    cache_pos: Optional[jax.Array] = None,  # int32 write index base:
+                                            # scalar, or (B,) per-row
+                                            # (ragged decode; T must be 1)
     block_tables: Optional[jax.Array] = None,  # (B, nb) i32: paged decode
     return_kv: bool = False,
     use_flash: bool = False,            # Pallas flash kernel (fwd-only paths)
@@ -173,6 +175,12 @@ def attention(
                                 attention reads the pool through the table —
                                 no dense per-step gather.  extra = new pools.
       cache, cache_pos=None     read-only cache (cross-attention); extra=None.
+
+    ``cache_pos`` may be a per-row ``(B,)`` vector (ragged decode, T == 1):
+    each row scatters its new K/V at its OWN position and masks its own
+    history — the serving engine fuses slots at arbitrary positions into
+    one step this way.  A scalar keeps the seed single-position semantics
+    byte-for-byte (and supports T > 1 in the linear branch).
     """
     dt = x.dtype
     B, T, _ = x.shape
@@ -213,14 +221,20 @@ def attention(
         # decode_shard_constraints pins for the per-slot dense cache do
         # not apply here.
         bs = cache["k"].shape[1]
-        blk = jnp.take(block_tables, cache_pos // bs, axis=1)       # (B,)
-        off = cache_pos % bs
+        # per-row positions: scatter each row's K/V at its own (block,
+        # offset) and attend over its own history — one call serves a
+        # ragged batch.  A scalar cache_pos broadcasts (uniform batch).
+        cpv = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32).reshape(-1), (B,))
+        blk = jnp.take_along_axis(
+            block_tables, (cpv // bs)[:, None], axis=1)[:, 0]       # (B,)
+        off = cpv % bs
         ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
         cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
         from repro.kernels import ops as kernel_ops
 
         o = kernel_ops.paged_attention(
-            q[:, 0], ck, cv, block_tables, cache_pos,
+            q[:, 0], ck, cv, block_tables, cpv,
             use_pallas=cfg.use_pallas)
         out = o.reshape(B, 1, hq * hd).astype(dt)
         return out @ p["wo"].astype(dt), {"k": ck, "v": cv}
@@ -228,29 +242,54 @@ def attention(
     extra = None
     if cache is not None and cache_pos is not None:
         s_cache = cache["k"].shape[1]
+        ragged = jnp.ndim(cache_pos) == 1       # per-row positions (T == 1)
+        bidx = jnp.arange(B)
         if window is not None and s_cache == window:
             # ring buffer: slot = pos % window (T must be 1)
             slot = cache_pos % window
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-            s_idx = jnp.arange(s_cache)
-            age = (cache_pos - s_idx) % window   # 0 for current slot
-            kv_pos = cache_pos - age             # absolute pos per slot
-            valid = kv_pos >= 0
-            mask = valid[None, None, None, :]
+            if ragged:
+                ck = cache["k"].at[bidx, slot].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[bidx, slot].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                s_idx = jnp.arange(s_cache)
+                age = (cache_pos[:, None] - s_idx[None, :]) % window
+                kv_pos = cache_pos[:, None] - age    # (B, S) absolute pos
+                mask = (kv_pos >= 0)[:, None, None, :]
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                s_idx = jnp.arange(s_cache)
+                age = (cache_pos - s_idx) % window   # 0 for current slot
+                kv_pos = cache_pos - age             # absolute pos per slot
+                valid = kv_pos >= 0
+                mask = valid[None, None, None, :]
         else:
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
-            kv_pos = jnp.arange(s_cache)
-            q_abs = cache_pos + jnp.arange(T)
-            m = kv_pos[None, :] <= q_abs[:, None]
-            if window is not None:
-                m &= kv_pos[None, :] > (q_abs[:, None] - window)
-            mask = m[None, None, :, :]
+            if ragged:
+                ck = cache["k"].at[bidx, cache_pos].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[bidx, cache_pos].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                kv_pos = jnp.arange(s_cache)
+                m = kv_pos[None, :] <= cache_pos[:, None]     # (B, S)
+                if window is not None:
+                    m &= kv_pos[None, :] > (cache_pos[:, None] - window)
+                mask = m[:, None, None, :]
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype),
+                    (0, cache_pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype),
+                    (0, cache_pos, 0, 0))
+                kv_pos = jnp.arange(s_cache)
+                q_abs = cache_pos + jnp.arange(T)
+                m = kv_pos[None, :] <= q_abs[:, None]
+                if window is not None:
+                    m &= kv_pos[None, :] > (q_abs[:, None] - window)
+                mask = m[None, None, :, :]
         extra = {"k": ck, "v": cv}
         k, v = ck.astype(dt), cv.astype(dt)
     elif cache is not None:                         # read-only: attend to all

@@ -344,11 +344,16 @@ def _run_stack_decode(stack_params, segs, x, caches, cfg: ModelConfig, *,
                       pos, block_tables=None):
     """One decode step. x: (B, 1, D). Returns (x, new_caches).
 
-    With ``block_tables``, linear K/V cache entries are block-paged
-    pools shared across the batch (see serve/paged_kv.py); attention
-    reads them through the table instead of a per-slot dense view.
+    ``pos`` is a scalar (uniform batch) or a per-row ``(B,)`` vector —
+    RAGGED decode: each row writes its cache and rotates its query at
+    its own position, so one step serves slots at arbitrary sequence
+    lengths.  With ``block_tables``, linear K/V cache entries are
+    block-paged pools shared across the batch (see serve/paged_kv.py);
+    attention reads them through the table instead of a per-slot dense
+    view.
     """
-    positions = jnp.reshape(pos, (1,))
+    positions = (jnp.reshape(pos, (1,)) if jnp.ndim(pos) == 0
+                 else pos[:, None])                  # (B, 1): per-row RoPE
     new_caches = []
     for seg_params, seg_cache, (unit, count) in zip(stack_params, caches,
                                                     segs):
@@ -505,8 +510,10 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
                 pos: jax.Array, *, block_tables=None):
-    """One decode step. token: (B, 1) int32; pos: scalar int32 (position of
-    ``token``). Returns (last_hidden (B, D), new_caches).
+    """One decode step. token: (B, 1) int32; pos: int32 position of
+    ``token`` — a scalar, or a per-row ``(B,)`` vector for RAGGED decode
+    (every row at its own position; the serving engine fuses all active
+    slots into one such call).  Returns (last_hidden (B, D), new_caches).
 
     ``block_tables`` (B, nb) int32 switches linear-attention cache
     leaves to the block-paged pool layout: the step scatters each new

@@ -6,33 +6,46 @@ The inference-accelerator story of the paper, at engine level:
   - fixed B decode slots over a SHARED, BLOCK-PAGED KV pool (block table
     per slot, free-list allocator — see serve/paged_kv.py); slots free
     their blocks on EOS/max_tokens and are refilled from the queue;
-  - decode attention is PAGED-NATIVE: the jitted step hands the model
-    the pools and the cohort's block table, each layer scatters its new
-    K/V row into the right pool block and attends straight off the pool
-    (``kernels/paged_attention.py``) — there is NO per-step gather into
-    a dense (B, S, ...) cache, so per-token cost tracks the sequence's
-    real length and is independent of ``max_len``;
-  - a scheduler interleaves prefill and decode: each iteration admits up
-    to ``prefill_per_step`` queued requests into free slots (subject to
-    block availability; an exhausted pool defers admission or preempts
-    the youngest slot back to the queue), then runs one decode step per
-    position-cohort of active slots;
+  - decode is RAGGED and FUSED: every engine iteration runs exactly ONE
+    jitted decode step over ALL active slots, regardless of where each
+    sequence is — ``positions`` is a per-row vector all the way down
+    (model, masks, RoPE, the paged-attention kernel's scalar-prefetch
+    operand).  The old scheduler sharded actives into position cohorts
+    (four slots at four positions = four batch≈1 jitted calls per
+    iteration), throwing away exactly the batching headroom the reduced
+    head buys; now ``stats['decode_steps'] == stats['iterations']``;
+  - mixed sampling never fragments the step: the fused call runs the
+    trunk ONCE over all rows, then applies each distinct
+    ``sampler.device_form()`` head to its own row subset inside the same
+    jitted body (row indices are traced operands; the canonical group
+    tuple is the jit key) — Greedy, TopK and Temperature traffic share
+    one compiled step;
+  - admission is PAGED-NATIVE: the jitted prefill scatters the prompt's
+    K/V straight into the slot's freshly-allocated pool blocks
+    (``api.serve_prefill_paged``); the dense prefill cache never
+    round-trips through the host.  A scheduler interleaves prefill and
+    decode: each iteration admits up to ``prefill_per_step`` queued
+    requests into free slots (subject to block availability; an
+    exhausted pool defers admission or preempts the youngest slot back
+    to the queue);
   - sampling is a ``Sampler`` object (serve/sampler.py): ``Greedy`` IS
     the reduced softmax unit (fused comparator — argmax over ``h @ W``
     with the (B, V) logits never materialized; no exp, no normalizing
     sum, no divide — Theorem 1), ``TopK`` the k-winner comparator with
     an O(k) host softmax, ``Temperature`` Gumbel-max over the logit row,
-    ``SoftmaxBaseline`` the full unit for A/B runs.  The legacy
-    ``head_mode`` string + per-request ``top_k``/``temperature`` are
-    resolved through ``sampler.resolve`` — the one string switch left.
+    ``SoftmaxBaseline`` the full unit for A/B runs.
 
-``kv_layout='dense'`` keeps the seed engine's per-slot ``max_len`` cache
-as the byte-identical oracle the paged path is tested against.
+``scheduler='cohort'`` keeps the PR 2 position-cohort scheduling (one
+fused call per (position, head) group) as the measurable baseline the
+ragged fused step is benchmarked against; ``kv_layout='dense'`` keeps
+the seed engine's per-slot ``max_len`` cache as the byte-identity oracle
+the paged path is tested against.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -41,11 +54,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import api
+from repro.models import api, lm
 from repro.parallel import env
 from repro.serve import sampler as sampler_mod
-from repro.serve.paged_kv import PagedKVStore
+from repro.serve.paged_kv import PagedKVStore, pow2 as _pow2
 from repro.serve.sampler import MAX_TOP_K, Sampler  # re-exported
+
 
 # ---------------------------------------------------------------------------
 # Jitted step bodies, shared across engine instances.
@@ -59,29 +73,58 @@ from repro.serve.sampler import MAX_TOP_K, Sampler  # re-exported
 @functools.lru_cache(maxsize=None)
 def _jitted_prefill(cfg: ModelConfig, sampler: Sampler, cache_len: int,
                     mesh):
+    """Dense-layout prefill (host-side admit copy) — the fallback for
+    stores with no paged leaves."""
     return jax.jit(lambda p, b: api.serve_prefill(p, cfg, b, cache_len,
                                                   sampler))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_step(cfg: ModelConfig, sampler: Sampler, treedef,
-                 paged_mask: tuple, mesh):
-    """Decode-step body over the split cache.  Paged leaves enter the
-    model AS the shared pools (plus the cohort block table); the model
-    scatters each new row into its block and attends off the pool in
-    place — nothing here rebuilds a dense view."""
+def _jitted_prefill_paged(cfg: ModelConfig, sampler: Sampler,
+                          cache_len: int, paged_mask: tuple, mesh):
+    """Paged-native prefill: prompt K/V scatters into the slot's pool
+    blocks INSIDE the jitted call (blocks are a traced operand); only
+    the head output and the small dense leaves come back."""
 
-    def step(params, toks, pools, denses, btab, pos):
+    def pf(params, batch, pools, blocks):
+        return api.serve_prefill_paged(params, cfg, batch, cache_len,
+                                       sampler, pools=pools, blocks=blocks,
+                                       paged_mask=paged_mask)
+
+    # pools donated: install_prefill unconditionally adopts the returned
+    # arrays, so the in-jit scatter aliases in place.
+    return jax.jit(pf, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(cfg: ModelConfig, samplers: tuple, treedef,
+                 paged_mask: tuple, mesh):
+    """THE fused ragged decode step: one jitted call per engine
+    iteration, whatever mix of positions and samplers is active.
+
+    The trunk (``lm.decode_step``) runs ONCE over all rows with per-row
+    ``positions``; paged leaves enter AS the shared pools (plus the
+    ragged block table) and each layer scatters its new K/V row at its
+    own position.  Then each head group — ``samplers`` is the canonical
+    tuple of distinct ``device_form()`` samplers — gathers its rows from
+    the shared hidden state and applies its head, all inside the same
+    call.  ``rows`` (per-group row-index vectors, pow-2 padded) are
+    traced operands, so WHICH rows belong to which head never retraces.
+    """
+
+    def step(params, toks, pools, denses, btab, positions, rows):
         leaves = [pool if m else dense
                   for m, pool, dense in zip(paged_mask, pools, denses)]
         cache = jax.tree.unflatten(treedef, leaves)
-        out, new_cache = api.serve_decode(params, cfg, toks, cache, pos,
-                                          sampler, block_tables=btab)
+        h, new_cache = lm.decode_step(params, cfg, toks, cache, positions,
+                                      block_tables=btab)
+        outs = tuple(s.head(params, cfg, h[r])
+                     for s, r in zip(samplers, rows))
         new_pools, new_denses = [], []
         for m, leaf in zip(paged_mask, jax.tree.flatten(new_cache)[0]):
             new_pools.append(leaf if m else None)
             new_denses.append(None if m else leaf)
-        return out, new_pools, new_denses
+        return outs, new_pools, new_denses
 
     # pools are donated: write_back unconditionally replaces store.pools
     # with the returned arrays, so the in-model scatter aliases in place
@@ -91,7 +134,7 @@ def _jitted_step(cfg: ModelConfig, sampler: Sampler, treedef,
 
 def _to_host(out):
     """Pull a sampler head output to host: one device->host sync per
-    cohort, tuple-structured outputs (the k-winner bus) leaf-wise."""
+    head group, tuple-structured outputs (the k-winner bus) leaf-wise."""
     if isinstance(out, tuple):
         return tuple(np.asarray(o) for o in out)
     return np.asarray(out)
@@ -106,10 +149,14 @@ class Request:
     temperature: float = 1.0
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # why generation stopped: 'eos' | 'length' (max_new_tokens) |
+    # 'max_len' (slot ran into the engine's cache ceiling — the request
+    # was truncated short of its max_new_tokens).
+    finish_reason: Optional[str] = None
     # per-request sampling RNG, seeded (engine seed, rid) at submit: the
     # nth emitted token consumes the nth draw regardless of scheduling
-    # (cohorting, deferral, preemption), so sampled generations are
-    # reproducible per request.
+    # (deferral, preemption), so sampled generations are reproducible
+    # per request.
     rng: Optional[np.random.Generator] = None
     # explicit Sampler; None -> resolved at submit from the engine's
     # head_mode plus this request's top_k/temperature.
@@ -122,7 +169,7 @@ class ServeEngine:
                  head_mode: str = "reduced", kv_layout: str = "paged",
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_per_step: Optional[int] = None,
-                 mesh=None, seed: int = 0):
+                 scheduler: str = "fused", mesh=None, seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -130,6 +177,11 @@ class ServeEngine:
         self.eos_id = eos_id
         self.head_mode = head_mode
         self.mesh = mesh
+        if scheduler not in ("fused", "cohort"):
+            raise ValueError(f"scheduler={scheduler!r}: expected 'fused' "
+                             "(one step per iteration) or 'cohort' (the "
+                             "PR 2 position-cohort baseline)")
+        self.scheduler = scheduler
         if sampler_mod.resolve(head_mode).needs_mesh and mesh is None:
             raise ValueError(f"head_mode={head_mode!r} requires mesh=")
         self.queue: deque = deque()
@@ -145,15 +197,14 @@ class ServeEngine:
         self.store = PagedKVStore(
             params, cfg, n_slots=n_slots, max_len=max_len,
             block_size=block_size, num_blocks=num_blocks, layout=kv_layout)
-        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
-                      "deferred": 0, "preemptions": 0}
-
-    def _decode_fn(self, sampler: Sampler):
-        return _jitted_step(self.cfg, sampler, self.store.treedef,
-                            tuple(self.store.paged_mask), self.mesh)
-
-    def _prefill_fn(self, cache_len: int, sampler: Sampler):
-        return _jitted_prefill(self.cfg, sampler, cache_len, self.mesh)
+        # decode_steps counts JITTED decode calls; iterations counts
+        # engine loop turns — the fused scheduler's contract is
+        # decode_steps == iterations (one call whatever the position /
+        # sampler mix); fused_rows counts real (non-padding) slot rows
+        # served across those calls, so benches can report rows-per-step.
+        self.stats = {"prefills": 0, "decode_steps": 0, "iterations": 0,
+                      "fused_rows": 0, "completed": 0, "deferred": 0,
+                      "preemptions": 0}
 
     # -- queue management ----------------------------------------------------
     def submit(self, req: Request):
@@ -168,6 +219,15 @@ class ServeEngine:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds max_len-1="
                 f"{self.max_len - 1}")
+        # a request fits iff prompt + max_new <= max_len (the t-th token
+        # lands at slot_pos = prompt + t - 1, and the max_len-1 ceiling
+        # is only checked when max_new_tokens hasn't already finished it)
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            warnings.warn(
+                f"request rid={req.rid}: prompt ({len(req.prompt)} tokens) "
+                f"+ max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_len={self.max_len}; generation will stop early "
+                "with finish_reason='max_len'", stacklevel=2)
         if req.rng is None:
             req.rng = np.random.default_rng([self.seed, req.rid])
         self.queue.append(req)
@@ -180,7 +240,12 @@ class ServeEngine:
 
         At most ``prefill_per_step`` admissions per engine iteration so
         prefill work cannot starve in-flight decodes; admission defers
-        when the block pool cannot cover the prompt plus one decode block.
+        when the block pool cannot cover the prompt plus one decode
+        block.  Deferral stops at the QUEUE HEAD — later (shorter)
+        requests never jump a deferred head, so FIFO admission is
+        starvation-free.  Paged stores admit natively: blocks are
+        allocated first and the jitted prefill scatters the prompt K/V
+        straight into them.
         """
         budget = self.prefill_per_step
         for i in self._free_slots():
@@ -194,12 +259,23 @@ class ServeEngine:
             self.queue.popleft()
             plen = self.store.prefill_len(S)
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-            fn = self._prefill_fn(plen, req.sampler.device_form())
+            dev = req.sampler.device_form()
             with env.use_mesh(self.mesh):
-                out, cache1 = fn(self.params, batch)
+                if self.store.any_paged:
+                    blocks = self.store.alloc_blocks(i, S)
+                    fn = _jitted_prefill_paged(
+                        self.cfg, dev, plen,
+                        tuple(self.store.paged_mask), self.mesh)
+                    out, new_pools, dense_leaves = fn(
+                        self.params, batch, self.store.pools,
+                        jnp.asarray(blocks, jnp.int32))
+                    self.store.install_prefill(i, new_pools, dense_leaves)
+                else:
+                    fn = _jitted_prefill(self.cfg, dev, plen, self.mesh)
+                    out, cache1 = fn(self.params, batch)
+                    self.store.admit(i, jax.tree.flatten(cache1)[0], S)
             self.stats["prefills"] += 1
             req.generated.append(req.sampler.pick(_to_host(out), 0, req.rng))
-            self.store.admit(i, jax.tree.flatten(cache1)[0], S)
             self.slots[i] = req
             self.slot_pos[i] = S
             self.admit_order.append(i)
@@ -228,8 +304,10 @@ class ServeEngine:
 
     # -- main loop ------------------------------------------------------------
     def step(self):
-        """One engine iteration: admit, then one decode step for every
-        position-cohort of active slots."""
+        """One engine iteration: admit, then ONE fused ragged decode step
+        over every active slot (``scheduler='cohort'`` partitions by
+        (position, head) first — the PR 2 baseline)."""
+        self.stats["iterations"] += 1
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -245,56 +323,86 @@ class ServeEngine:
                     f"{self.store.allocator.num_blocks} x "
                     f"{self.store.block_size}-token blocks is too small")
             return bool(self.queue)
-        # Slots decode at their own positions; cohorts share
-        # (pos, device-form sampler) so one jitted call serves each group
-        # — host-only fields (temperature) never fragment a cohort.
-        cohorts: Dict[tuple, list] = {}
-        for i in active:
-            dev = self.slots[i].sampler.device_form()
-            cohorts.setdefault((int(self.slot_pos[i]), dev), []).append(i)
-        for (pos, dev), idxs in sorted(
-                cohorts.items(), key=lambda kv: (kv[0][0], repr(kv[0][1]))):
-            idxs = [i for i in idxs if self._ensure_blocks(i, pos)]
-            # a later member's ensure may have PREEMPTED an earlier
-            # accepted member (keep= only shields the current slot):
-            # re-validate the whole cohort after the capacity pass.
-            idxs = [i for i in idxs if self.slots[i] is not None]
-            if not idxs:
-                continue
-            # Bucket batch and block-view sizes to powers of two so decode
-            # compiles O(log n_slots * log max_blocks) shapes, not one per
-            # (cohort, seq-length) pair. Padding rows duplicate row 0
-            # (identical compute; the duplicate write lands the same value
-            # on the same pool cell); padding block columns repeat a valid
-            # block whose rows the kv_pos<=pos mask discards.
-            n_real = len(idxs)
-            padded = idxs + [idxs[0]] * ((1 << (n_real - 1).bit_length())
-                                         - n_real)
-            toks = np.array([[self.slots[i].generated[-1]] for i in padded],
-                            np.int32)
-            btab = self.store.block_table(padded, pos)
-            denses = self.store.dense_sub(padded)
-            with env.use_mesh(self.mesh):
-                out, new_pools, new_denses = self._decode_fn(dev)(
-                    self.params, jnp.asarray(toks), self.store.pools,
-                    denses, btab, jnp.int32(pos))
-            self.stats["decode_steps"] += 1
-            self.store.write_back(
-                idxs, new_pools,
-                [None if d is None else d[:, :n_real] for d in new_denses])
-            # one device->host sync per cohort, not per slot
-            out = _to_host(out)
-            for j, i in enumerate(idxs):
-                req = self.slots[i]
-                req.generated.append(req.sampler.pick(out, j, req.rng))
-                self.slot_pos[i] += 1
-                self._check_done(i)
+        # capacity pass at each slot's OWN position; a later slot's
+        # ensure may have PREEMPTED an earlier accepted one (keep= only
+        # shields the current slot): re-validate afterwards.
+        active = [i for i in active
+                  if self._ensure_blocks(i, int(self.slot_pos[i]))]
+        active = [i for i in active if self.slots[i] is not None]
+        if not active:
+            return True
+        if self.scheduler == "cohort":
+            parts: Dict[tuple, list] = {}
+            for i in active:
+                dev = self.slots[i].sampler.device_form()
+                parts.setdefault((int(self.slot_pos[i]), repr(dev)),
+                                 []).append(i)
+            for key in sorted(parts):
+                self._decode_rows(parts[key])
+        else:
+            self._decode_rows(active)
         return True
+
+    def _decode_rows(self, rows: List[int]):
+        """One fused jitted decode call over the given slot rows — ragged
+        positions, mixed samplers.
+
+        Batch and block-view sizes are bucketed to powers of two so
+        decode compiles O(log n_slots * log max_blocks) shapes, not one
+        per (batch, seq-length) pair.  Padding rows duplicate row 0
+        (identical compute; the duplicate write lands the same value on
+        the same cache cell); padded block-table columns repeat a block
+        the row owns, past its position, so the per-row kv_pos<=pos mask
+        discards them.  Head groups (one per distinct ``device_form()``)
+        partition the padded rows; their pow-2-padded row-index vectors
+        are traced operands of the ONE jitted call.
+        """
+        n_real = len(rows)
+        padded = rows + [rows[0]] * (_pow2(n_real) - n_real)
+        groups: Dict[Sampler, list] = {}
+        where = []                       # row r -> (its group, offset)
+        for r, i in enumerate(padded):
+            dev = self.slots[i].sampler.device_form()
+            lst = groups.setdefault(dev, [])
+            where.append((dev, len(lst)))
+            lst.append(r)
+        order = sampler_mod.canonical_order(groups)
+        row_sets = tuple(
+            jnp.asarray(groups[dev] + [groups[dev][0]]
+                        * (_pow2(len(groups[dev])) - len(groups[dev])),
+                        jnp.int32)
+            for dev in order)
+        toks = np.array([[self.slots[i].generated[-1]] for i in padded],
+                        np.int32)
+        positions = np.array([self.slot_pos[i] for i in padded], np.int32)
+        btab = self.store.block_table(padded, positions)
+        denses = self.store.dense_sub(padded)
+        fn = _jitted_step(self.cfg, tuple(order), self.store.treedef,
+                          tuple(self.store.paged_mask), self.mesh)
+        with env.use_mesh(self.mesh):
+            outs, new_pools, new_denses = fn(
+                self.params, jnp.asarray(toks), self.store.pools, denses,
+                None if btab is None else jnp.asarray(btab),
+                jnp.asarray(positions), row_sets)
+        self.stats["decode_steps"] += 1
+        self.stats["fused_rows"] += n_real
+        self.store.write_back(
+            rows, new_pools,
+            [None if d is None else d[:, :n_real] for d in new_denses])
+        # one device->host sync per head group, not per slot
+        host = {dev: _to_host(o) for dev, o in zip(order, outs)}
+        for r in range(n_real):
+            i = padded[r]
+            dev, off = where[r]
+            req = self.slots[i]
+            req.generated.append(req.sampler.pick(host[dev], off, req.rng))
+            self.slot_pos[i] += 1
+            self._check_done(i)
 
     def _ensure_blocks(self, i: int, pos: int) -> bool:
         """Grow slot i's block table to cover ``pos``; preempt the
         youngest other slot if the pool is dry."""
-        if self.slots[i] is None:      # preempted earlier in this cohort
+        if self.slots[i] is None:      # preempted earlier this iteration
             return False
         while not self.store.ensure_capacity(i, pos):
             if not self._preempt_youngest(keep=i):
@@ -313,13 +421,19 @@ class ServeEngine:
         req = self.slots[i] if self.slots[i] else None
         if req is None:
             return
-        hit_eos = req.generated and req.generated[-1] == self.eos_id
-        full = len(req.generated) >= req.max_new_tokens
-        over = self.slot_pos[i] >= self.max_len - 1
-        if hit_eos or full or over:
-            req.done = True
-            self.stats["completed"] += 1
-            self._release_slot(i)     # blocks back to the free list
+        if req.generated and req.generated[-1] == self.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.generated) >= req.max_new_tokens:
+            req.finish_reason = "length"
+        elif self.slot_pos[i] >= self.max_len - 1:
+            # cache ceiling: the request is TRUNCATED short of its
+            # max_new_tokens (submit warned about this combination)
+            req.finish_reason = "max_len"
+        else:
+            return
+        req.done = True
+        self.stats["completed"] += 1
+        self._release_slot(i)     # blocks back to the free list
 
     def run(self, max_iters: int = 1000):
         it = 0

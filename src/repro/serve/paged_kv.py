@@ -41,6 +41,13 @@ from repro.configs.base import ModelConfig
 from repro.models import lm
 
 
+def pow2(n: int) -> int:
+    """Next power of two >= n — the ONE shape-bucketing rule shared by
+    the engine's batch/row-set padding and the block-table column
+    padding (they must agree, or compiled shapes diverge)."""
+    return 1 << (n - 1).bit_length()
+
+
 class BlockAllocator:
     """Free-list allocator over ``num_blocks`` pool blocks.
 
@@ -152,10 +159,36 @@ class PagedKVStore:
         return self.blocks_for(prompt_len) * self.block_size
 
     # -- slot lifecycle ------------------------------------------------------
+    def alloc_blocks(self, slot: int, prompt_len: int):
+        """Allocate the prompt's block cover for ``slot`` ahead of a
+        paged-native prefill (``api.serve_prefill_paged`` scatters the
+        prompt K/V straight into these blocks on device)."""
+        assert not self.slot_blocks[slot], (slot, self.slot_blocks[slot])
+        nb = self.blocks_for(prompt_len)
+        self.slot_blocks[slot] = self.allocator.alloc(nb) if nb else []
+        return self.slot_blocks[slot]
+
+    def install_prefill(self, slot: int, new_pools, dense_leaves) -> None:
+        """Adopt the pools returned by a paged-native prefill — the
+        prompt K/V is already scattered into ``slot``'s blocks on device
+        (no host round-trip of a dense cache) — and copy the non-paged
+        leaves (ring buffers, recurrent state, cross-attn K/V) into the
+        slot's dense row."""
+        for j, m in enumerate(self.paged_mask):
+            if m:
+                self.pools[j] = new_pools[j]
+            else:
+                self.denses[j] = self.denses[j].at[:, slot].set(
+                    dense_leaves[j][:, 0].astype(self.denses[j].dtype))
+
     def admit(self, slot: int, cache1_leaves, prompt_len: int) -> None:
         """Write a B=1 prefill cache (built at ``prefill_len``) into
         ``slot``: paged leaves scatter into freshly-allocated pool blocks,
-        dense leaves copy into the slot row."""
+        dense leaves copy into the slot row.  This is the host-side
+        fallback for layouts with no paged leaves (``kv_layout='dense'``,
+        hybrid/ssm/windowed configs); paged admission goes through
+        ``alloc_blocks`` + ``api.serve_prefill_paged`` +
+        ``install_prefill`` and never round-trips the cache."""
         assert not self.slot_blocks[slot], (slot, self.slot_blocks[slot])
         nb = self.blocks_for(prompt_len)
         blocks = self.allocator.alloc(nb) if nb else []
@@ -189,32 +222,36 @@ class PagedKVStore:
         self.allocator.free(self.slot_blocks[slot])
         self.slot_blocks[slot] = []
 
-    # -- cohort views --------------------------------------------------------
-    def block_table(self, idxs, pos: int, *,
+    # -- ragged batch views --------------------------------------------------
+    def block_table(self, idxs, positions, *,
                     pad_pow2: bool = True) -> Optional[np.ndarray]:
-        """(B, nb) int32 table covering positions [0, pos] for the cohort
-        (every slot at the same pos owns the same block count).
+        """(B, nb_max) int32 table where row r covers positions
+        [0, positions[r]] for slot ``idxs[r]`` — rows may sit at
+        DIFFERENT positions (ragged fused decode).  A scalar
+        ``positions`` broadcasts to every row.
 
-        ``pad_pow2`` pads the column count to the next power of two by
-        repeating each row's first block, so decode compiles O(log
-        max_blocks) shapes; the repeated columns sit past ``pos`` and
-        the kv_pos<=pos mask discards them.
+        Rows shorter than the widest are padded with their own first
+        block, and ``pad_pow2`` pads the column count to the next power
+        of two the same way, so decode compiles O(log max_blocks) shapes;
+        every padded column sits past its row's ``positions[r]`` and the
+        per-row kv_pos<=pos mask discards it.
         """
         if not self.any_paged:
             return None
-        nb = pos // self.block_size + 1
-        btab = np.asarray(
-            [self.slot_blocks[i][:nb] for i in idxs], np.int32)
+        positions = np.broadcast_to(
+            np.asarray(positions, np.int64).reshape(-1), (len(idxs),))
+        nbs = positions // self.block_size + 1
+        nb_max = int(nbs.max())
         if pad_pow2:
-            nbb = 1 << (nb - 1).bit_length()
-            if nbb > nb:
-                btab = np.concatenate(
-                    [btab, np.repeat(btab[:, :1], nbb - nb, axis=1)],
-                    axis=1)
-        return btab
+            nb_max = pow2(nb_max)
+        rows = []
+        for i, nb_i in zip(idxs, nbs):
+            own = self.slot_blocks[i][:int(nb_i)]
+            rows.append(own + [own[0]] * (nb_max - len(own)))
+        return np.asarray(rows, np.int32)
 
     def dense_sub(self, idxs):
-        """Cohort slices of the dense leaves (None where paged)."""
+        """Batch-row slices of the dense leaves (None where paged)."""
         sel = np.asarray(idxs)
         return [None if d is None else d[:, sel] for d in self.denses]
 

@@ -16,7 +16,11 @@ strings in three different places (plus a parallel ``top_k`` fork).  A
 Samplers are FROZEN dataclasses — hashable, so jitted step bodies are
 cached per sampler.  ``device_form()`` strips host-only fields
 (temperature) so requests that differ only in host-side sampling share
-one compiled step and one engine cohort.
+one compiled step and one head group inside the engine's fused ragged
+decode step (the trunk runs once over every active slot; each distinct
+device form applies its head to its own row subset in the same jitted
+call — ``canonical_order`` fixes the group order so the jit key is
+stable across iterations).
 
 The paper mapping:
 
@@ -77,8 +81,9 @@ class Sampler:
         """Raise ValueError for configurations this sampler cannot serve."""
 
     def device_form(self) -> "Sampler":
-        """The sampler with host-only fields canonicalized: requests that
-        differ only host-side share one compiled step / engine cohort."""
+        """The sampler with host-only fields canonicalized: requests
+        that differ only host-side share one compiled step and one head
+        group inside the fused decode call."""
         return self
 
     @property
@@ -111,7 +116,8 @@ class Greedy(Sampler):
         w = _head_weight(params, cfg)
         if self.head_mode == "sharded":
             # Vocab-sharded head: per-shard fused argmax + tiny (val,
-            # idx) combine. Batch replicated (engine cohorts are ragged).
+            # idx) combine. Batch replicated (the fused step's batch
+            # tracks the active-slot count).
             from repro.parallel import env
 
             mesh = env.current_mesh()
@@ -216,6 +222,15 @@ class Temperature(Sampler):
             return int(np.argmax(logits))
         g = rng.gumbel(size=logits.shape)
         return int(np.argmax(logits / self.temperature + g))
+
+
+def canonical_order(samplers) -> list:
+    """Deterministic ordering for a set of device-form samplers: the
+    fused decode step applies one head per distinct ``device_form()``,
+    and the ordered tuple is part of the jitted-step cache key — repr
+    order makes that key independent of slot arrival order, so an
+    engine serving the same sampler MIX never retraces."""
+    return sorted(samplers, key=repr)
 
 
 def resolve(spec: Union[str, Sampler], top_k: int = 1,

@@ -1,4 +1,4 @@
-"""Paged-attention-native decode + the Sampler protocol.
+"""Paged-attention-native RAGGED decode + the Sampler protocol.
 
 Property tests (hypothesis, or the deterministic shim on bare envs):
 
@@ -6,8 +6,12 @@ Property tests (hypothesis, or the deterministic shim on bare envs):
     lengths, block sizes and GQA group widths — at the op level (the
     ref twin vs an independently-built dense view) and at the kernel
     level (Pallas interpret vs the ref twin);
+  - RAGGED positions: one call with a per-row ``positions`` vector
+    equals B independent per-row calls at each row's scalar position —
+    the invariant the fused engine step rests on;
   - engine-level: paged == dense generations across random traces,
-    block-boundary prompt lengths, and post-preemption re-prefill;
+    block-boundary prompt lengths, and post-preemption re-prefill (all
+    through the fused one-step-per-iteration scheduler);
   - every Sampler at temperature -> 0 equals the fused argmax
     comparator (Theorem 1), including lowest-index tie-breaking.
 """
@@ -108,6 +112,80 @@ def test_paged_kernel_matches_ref(pos, bs, g):
     p = np.asarray(ops.paged_attention(q, kp, vp, btp, jnp.int32(pos),
                                        use_pallas=True, interpret=True))
     np.testing.assert_allclose(p, r, rtol=2e-5, atol=2e-6)
+
+
+def _ragged_case(rng, positions, bs, g, hkv=2, hd=16, spare=3):
+    """Pools + per-row tables where every row sits at its OWN position;
+    rows shorter than the widest pad their table with their first block
+    (exactly what the engine's ragged block_table builds)."""
+    b = len(positions)
+    nb = max(positions) // bs + 1
+    nblocks = b * nb + spare
+    q = jnp.asarray(rng.normal(size=(b, g * hkv, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nblocks, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nblocks, bs, hkv, hd)), jnp.float32)
+    rows = []
+    for p in positions:
+        own = rng.choice(nblocks, p // bs + 1, replace=False)
+        rows.append(np.concatenate(
+            [own, np.repeat(own[:1], nb - len(own))]))
+    return q, kp, vp, jnp.asarray(np.stack(rows), jnp.int32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=47),
+                min_size=2, max_size=5),
+       st.sampled_from([4, 8, 16]),
+       st.sampled_from([1, 2, 4]))
+def test_paged_ref_ragged_positions_row_equivalence(positions, bs, g):
+    """One ragged call == B independent per-row calls at scalar
+    positions: the op is row-separable, so slots at arbitrary sequence
+    lengths fuse into one step without changing any row's math."""
+    rng = np.random.default_rng([bs, g] + list(positions))
+    q, kp, vp, bt = _ragged_case(rng, positions, bs, g)
+    pos = jnp.asarray(positions, jnp.int32)
+    got = np.asarray(ref.paged_attention(q, kp, vp, bt, pos))
+    for i, p in enumerate(positions):
+        row = np.asarray(ref.paged_attention(
+            q[i:i + 1], kp, vp, bt[i:i + 1], jnp.int32(p)))
+        np.testing.assert_allclose(got[i], row[0], rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40),
+                min_size=2, max_size=4),
+       st.sampled_from([4, 8]),
+       st.sampled_from([1, 2]))
+def test_paged_kernel_ragged_matches_ref(positions, bs, g):
+    """The Pallas kernel's per-row scalar-prefetch position mask agrees
+    with the ref twin on ragged batches (pow-2-padded tables included)."""
+    rng = np.random.default_rng([11, bs, g] + list(positions))
+    q, kp, vp, bt = _ragged_case(rng, positions, bs, g)
+    nb = bt.shape[1]
+    nbb = 1 << (nb - 1).bit_length()
+    btp = jnp.concatenate(
+        [bt, jnp.repeat(bt[:, :1], nbb - nb, axis=1)], axis=1)
+    pos = jnp.asarray(positions, jnp.int32)
+    r = np.asarray(ref.paged_attention(q, kp, vp, btp, pos))
+    p = np.asarray(ops.paged_attention(q, kp, vp, btp, pos,
+                                       use_pallas=True, interpret=True))
+    np.testing.assert_allclose(p, r, rtol=2e-5, atol=2e-6)
+
+
+def test_paged_scalar_position_broadcasts():
+    """A scalar position still broadcasts to the whole batch (the legacy
+    uniform-batch call signature keeps working)."""
+    rng = np.random.default_rng(3)
+    q, kp, vp, bt = _pool_case(rng, 13, 8, g=2)
+    vec = jnp.full((q.shape[0],), 13, jnp.int32)
+    a = np.asarray(ref.paged_attention(q, kp, vp, bt, jnp.int32(13)))
+    b = np.asarray(ref.paged_attention(q, kp, vp, bt, vec))
+    np.testing.assert_array_equal(a, b)
+    pa = np.asarray(ops.paged_attention(q, kp, vp, bt, jnp.int32(13),
+                                        use_pallas=True, interpret=True))
+    pb = np.asarray(ops.paged_attention(q, kp, vp, bt, vec,
+                                        use_pallas=True, interpret=True))
+    np.testing.assert_array_equal(pa, pb)
 
 
 def test_paged_kernel_block_boundaries():

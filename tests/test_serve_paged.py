@@ -230,6 +230,225 @@ def test_sharded_engine_matches_local():
 
 
 # ---------------------------------------------------------------------------
+# Fused ragged decode: one jitted call per engine iteration
+# ---------------------------------------------------------------------------
+def test_fused_one_step_per_iteration_ragged_mixed_samplers():
+    """Staggered prompt lengths AND mixed samplers: the fused scheduler
+    runs exactly ONE jitted decode call per engine iteration
+    (decode_steps == iterations), serves every active row in it
+    (fused_rows == decode-emitted tokens), and emits the same tokens as
+    the PR 2 position-cohort baseline — which needs strictly more calls.
+    """
+    from repro.serve.sampler import Greedy, Temperature, TopK
+    cfg, params = _mk()
+    rng = np.random.default_rng(29)
+    plens = [3, 9, 14, 22]              # no two slots share a position
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in plens]
+    samplers = [Greedy(), TopK(4, temperature=0.8), Temperature(0.7),
+                Greedy()]
+
+    def serve(sched):
+        eng = ServeEngine(params, cfg, n_slots=4, max_len=48, eos_id=1,
+                          kv_layout="paged", block_size=8, scheduler=sched)
+        reqs = [Request(i, p.copy(), 6, sampler=s)
+                for i, (p, s) in enumerate(zip(prompts, samplers))]
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run()
+        return [r.generated for r in reqs], stats
+
+    fused, fs = serve("fused")
+    assert fs["decode_steps"] == fs["iterations"], fs
+    decode_tokens = sum(len(g) - 1 for g in fused)   # first token: prefill
+    assert fs["fused_rows"] == decode_tokens, fs
+    cohort, cs = serve("cohort")
+    # per-request RNG streams make sampled rows reproducible across
+    # schedulers: the fused step changes batching, never tokens
+    assert fused == cohort
+    assert cs["decode_steps"] > cs["iterations"], cs
+
+
+def test_fused_ragged_paged_equals_dense_staggered():
+    """Staggered lengths through the fused step: paged generations ==
+    the dense (seed-layout) oracle, token-exact, with one call/iter."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(37)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 8, 9, 17, 26)]
+    dense, de = _run(params, cfg, prompts, max_new=6,
+                     n_slots=5, max_len=48, kv_layout="dense")
+    paged, pe = _run(params, cfg, prompts, max_new=6,
+                     n_slots=5, max_len=48, kv_layout="paged", block_size=8)
+    assert paged == dense
+    assert pe.stats["decode_steps"] == pe.stats["iterations"]
+    assert de.stats["decode_steps"] == de.stats["iterations"]
+
+
+def test_fused_ragged_windowed_hybrid_matches_scalar_replay():
+    """Ragged fused decode through the RING-BUFFER cache (hybrid arch,
+    sliding-window attention + recurrent state — nothing paged): the
+    per-row vectorized ring scatter/mask must match a per-request scalar
+    replay token-exactly."""
+    cfg, params = _mk("recurrentgemma-2b")
+    assert cfg.attention_window is not None
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (4, 11, 19)]                 # straddles window=16
+    max_new = 8
+    gens, eng = _run(params, cfg, prompts, max_new=max_new,
+                     n_slots=3, max_len=40)
+    assert not eng.store.any_paged                   # ring + state: dense
+    assert eng.stats["decode_steps"] == eng.stats["iterations"]
+
+    w = lm.lm_head_weight(params, cfg)
+    for prompt, gen in zip(prompts, gens):
+        h, cache = lm.prefill(params, cfg,
+                              {"tokens": jnp.asarray(prompt)[None]}, 40)
+        want = [int(jnp.argmax(h @ w, axis=-1)[0])]
+        for i in range(max_new - 1):
+            if want[-1] == 1:
+                break
+            h, cache = lm.decode_step(
+                params, cfg, jnp.asarray([[want[-1]]], jnp.int32), cache,
+                jnp.int32(len(prompt) + i))
+            want.append(int(jnp.argmax(h @ w, axis=-1)[0]))
+        assert gen == want
+
+
+# ---------------------------------------------------------------------------
+# Finish reasons + submit warning
+# ---------------------------------------------------------------------------
+def test_finish_reason_length_and_max_len():
+    cfg, params = _mk()
+    rng = np.random.default_rng(43)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    # 'length': max_new_tokens reached well inside the cache (the slot
+    # is released, but the Request object keeps the reason)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=64, eos_id=-1)
+    r_len = Request(0, prompt.copy(), 4)
+    eng.submit(r_len)
+    eng.run()
+    assert r_len.done and r_len.finish_reason == "length"
+    assert len(r_len.generated) == 4
+
+    # exact fit (prompt + max_new == max_len): completes in full with
+    # finish_reason='length' and must NOT warn
+    import warnings as _warnings
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=16, eos_id=-1)
+    r_fit = Request(2, prompt.copy(), 16 - len(prompt))
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        eng.submit(r_fit)
+    eng.run()
+    assert r_fit.done and r_fit.finish_reason == "length"
+    assert len(r_fit.generated) == 16 - len(prompt)
+
+    # 'max_len': the cache ceiling truncates the request (warned at
+    # submit — the seed engine truncated SILENTLY)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=16, eos_id=-1)
+    r_trunc = Request(1, prompt.copy(), 50)
+    with pytest.warns(UserWarning, match="max_len"):
+        eng.submit(r_trunc)
+    eng.run()
+    assert r_trunc.done and r_trunc.finish_reason == "max_len"
+    assert len(r_trunc.generated) < 50
+
+
+def test_finish_reason_eos():
+    cfg, params = _mk()
+    rng = np.random.default_rng(47)
+    prompt = rng.integers(0, cfg.vocab_size, size=7).astype(np.int32)
+    # learn the greedy trace, then declare as EOS the first token that
+    # has no earlier duplicate (so the rerun stops exactly there)
+    probe = Request(0, prompt.copy(), 6)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=48, eos_id=-1)
+    eng.submit(probe)
+    eng.run()
+    j = next(j for j in range(1, len(probe.generated))
+             if probe.generated[j] not in probe.generated[:j])
+    eos = probe.generated[j]
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=48, eos_id=int(eos))
+    r = Request(1, prompt.copy(), 6)
+    eng.submit(r)
+    eng.run()
+    assert r.done and r.finish_reason == "eos"
+    assert r.generated == probe.generated[:j + 1]
+
+
+# ---------------------------------------------------------------------------
+# Capacity edge paths
+# ---------------------------------------------------------------------------
+def test_pool_too_small_for_single_sequence_raises_mid_decode():
+    """A pool a lone sequence outgrows mid-decode (nothing to preempt)
+    fails loudly instead of spinning."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(53)
+    prompt = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=64, eos_id=-1,
+                      block_size=8, num_blocks=2)
+    eng.submit(Request(0, prompt.copy(), 30))
+    with pytest.raises(MemoryError, match="single sequence"):
+        eng.run()
+
+
+def test_preempt_reprefill_paged_native_token_exact():
+    """Preempt -> paged-native re-prefill (prompt K/V scattered straight
+    into fresh pool blocks) continues token-exactly, and every block
+    returns to the free list."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(59)
+    prompts = [rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)
+               for _ in range(3)]
+    dense, _ = _run(params, cfg, prompts, max_new=13,
+                    n_slots=2, max_len=64, kv_layout="dense")
+    tight, eng = _run(params, cfg, prompts, max_new=13,
+                      n_slots=2, max_len=64, kv_layout="paged",
+                      block_size=8, num_blocks=5)
+    assert tight == dense
+    assert eng.stats["preemptions"] >= 1
+    assert eng.store.allocator.n_free == 5
+    assert all(b == [] for b in eng.store.slot_blocks)
+
+
+def test_admit_deferral_fifo_head_never_starved():
+    """A long request at the queue head defers on block pressure; later
+    SHORT requests (which would fit) must not jump it — admission is
+    strictly FIFO, so the head is never starved by a stream of shorts."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(61)
+    runner = Request(0, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                     max_new_tokens=10)
+    longr = Request(1, rng.integers(0, cfg.vocab_size, 20).astype(np.int32),
+                    max_new_tokens=3)
+    shorts = [Request(rid, rng.integers(0, cfg.vocab_size, 4)
+                      .astype(np.int32), max_new_tokens=3)
+              for rid in (2, 3)]
+    # pool: 4 x 8-token blocks. runner takes 1 (then grows to 3); longr
+    # needs blocks_for(20)+1 = 4 free -> deferred while runner holds the
+    # pool; shorts need only 2 and WOULD fit — they must still wait.
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=48, eos_id=-1,
+                      block_size=8, num_blocks=4)
+    for r in (runner, longr, *shorts):
+        eng.submit(r)
+    saw_deferral = False
+    for _ in range(200):
+        running = {s.rid for s in eng.slots if s is not None}
+        if not longr.done and longr in eng.queue:
+            # while the long head waits, no short may run
+            assert not ({2, 3} & running), (running, eng.stats)
+            saw_deferral = saw_deferral or eng.stats["deferred"] > 0
+        if not eng.step():
+            break
+        if all(r.done for r in (runner, longr, *shorts)):
+            break
+    assert saw_deferral, eng.stats
+    assert all(r.done for r in (runner, longr, *shorts))
+    assert [r.finish_reason for r in (runner, longr, *shorts)] == \
+        ["length"] * 4
+
+
+# ---------------------------------------------------------------------------
 # Top-k comparator at engine level
 # ---------------------------------------------------------------------------
 def test_topk_temperature_zero_is_greedy():
