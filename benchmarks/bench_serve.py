@@ -237,6 +237,57 @@ def ragged_sweep(arch="qwen3-0.6b", n_requests=12, max_new=10, max_len=96,
                 speedup=fused["tok_s"] / cohort["tok_s"])
 
 
+def streaming_latency(arch="qwen3-0.6b", n_requests=8, max_new=12,
+                      n_slots=4, max_len=96, verbose=True):
+    """Streaming metrics through the LLM facade: per-request TTFT
+    (submit -> first TokenChunk) and inter-token latency, measured at
+    the consumer — the numbers an SSE client of serve/server.py sees.
+
+    All requests are submitted up front, so TTFT includes queueing
+    behind the slot limit (requests n_slots.. wait for a free slot) —
+    the continuous-batching tradeoff the columns exist to watch.
+    """
+    from repro.serve.api import LLM
+    from repro.serve.params import SamplingParams
+
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    llm = LLM(params, cfg, n_slots=n_slots, max_len=max_len, eos_id=1,
+              kv_layout="paged")
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 24))).astype(np.int32)
+               for _ in range(n_requests)]
+    sp = SamplingParams(max_new_tokens=max_new)
+    # consumer-side emission stamps: ITL as a streaming client sees it
+    emit_t = {}
+    llm.engine.add_consumer(
+        lambda c: emit_t.setdefault(c.rid, []).append(time.perf_counter()))
+    llm.generate(prompts, sp)                        # warmup: compile
+    emit_t.clear()
+    outs = llm.generate(prompts, sp)
+    ttft = [o.timing.ttft_ms for o in outs]
+    itls = []
+    for o in outs:
+        ts = emit_t[o.rid]
+        itls += [(b - a) * 1e3 for a, b in zip(ts, ts[1:])]
+    row = dict(n_requests=n_requests, n_slots=n_slots, max_new=max_new,
+               ttft_ms_mean=float(np.mean(ttft)),
+               ttft_ms_p50=float(np.median(ttft)),
+               ttft_ms_max=float(np.max(ttft)),
+               itl_ms_mean=float(np.mean(itls)),
+               itl_ms_p50=float(np.median(itls)),
+               itl_ms_max=float(np.max(itls)),
+               tok_s_mean=float(np.mean([o.timing.tok_s for o in outs])))
+    if verbose:
+        print(f"streaming (facade, {n_requests} req / {n_slots} slots): "
+              f"TTFT mean {row['ttft_ms_mean']:7.1f} ms "
+              f"(p50 {row['ttft_ms_p50']:.1f}, max {row['ttft_ms_max']:.1f})"
+              f"  ITL mean {row['itl_ms_mean']:6.2f} ms "
+              f"(p50 {row['itl_ms_p50']:.2f}, max {row['itl_ms_max']:.2f})")
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -259,6 +310,10 @@ def main():
           "position-cohort baseline:")
     ragged = ragged_sweep(arch=args.arch, n_requests=args.requests,
                           max_new=args.max_new, max_len=args.max_len)
+    print("\nstreaming TTFT / inter-token latency (LLM facade):")
+    streaming = streaming_latency(arch=args.arch,
+                                  n_requests=args.requests,
+                                  max_new=args.max_new)
     print("\nper-step decode latency vs max_len (fixed sequence length):")
     sweep = latency_vs_max_len(arch=args.arch,
                                max_lens=tuple(args.max_len_sweep))
@@ -269,6 +324,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump({"arch": args.arch, "backend": jax.default_backend(),
                    "slot_sweep": rows, "ragged_sweep": ragged,
+                   "streaming": streaming,
                    "latency_vs_max_len": sweep},
                   f, indent=2)
     print(f"wrote {args.out}")

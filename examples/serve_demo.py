@@ -1,93 +1,115 @@
-"""Serving demo: continuous batching + paged KV with Sampler heads.
+"""Serving demo: the LLM facade over continuous batching + paged KV.
 
-Shows the engine admitting a mixed queue of ``Sampler``-typed requests
-(greedy comparator, top-k comparator bus, Gumbel-max temperature) into a
-fixed set of decode slots over a block-paged KV pool — decode attention
-reads the pool in place through block tables; no per-step gather — and
-(the paper's point) that greedy serving never computes a softmax: every
-greedy step is the fused comparator, the top-k requests only ever
-exp/normalize k values instead of the vocab, and the temperature
-requests sample by perturb-then-compare.
+The public API shape of the reduced unit (the engine internals —
+block-paged KV pool, ONE fused ragged decode step per iteration, mixed
+Sampler heads in one jitted call — are unchanged underneath):
 
-Decode is RAGGED AND FUSED: every engine iteration is exactly ONE jitted
-step over all active slots, each at its own position, the three sampler
-kinds sharing one trunk forward (asserted below via
-``decode_steps == iterations``).  Each request reports WHY it finished
-(``finish_reason``: eos / length / max_len).
-
-The same greedy trace is then re-served through ``SoftmaxBaseline`` (the
-full softmax unit) and asserted TOKEN-IDENTICAL — Theorem 1 live.
+  - ``LLM.generate(prompts, params)``: batched, order-preserving, typed
+    ``SamplingParams`` in (mixed greedy comparator / top-k comparator
+    bus / Gumbel-max temperature per request) and ``RequestOutput`` out
+    (token ids, finish_reason, per-request queued/prefill/decode timing);
+  - ``LLM.stream(prompt, params)``: per-token ``TokenChunk``s yielded
+    while the request — and every other in-flight request — is still
+    running, with the top-k "logprob-free" candidate ids riding along;
+  - stop sequences matched host-side at emission time
+    (``finish_reason='stop'``);
+  - (the paper's point) greedy serving never computes a softmax: the
+    same prompts through ``head_mode='reduced'`` and
+    ``head_mode='softmax'`` yield token-identical output — Theorem 1 at
+    the API level.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import ARCHS, smoke_config
-from repro.models import lm
-from repro.serve.engine import Request, ServeEngine
-from repro.serve.sampler import Greedy, SoftmaxBaseline, Temperature, TopK
-
-
-def serve(params, cfg, prompts, samplers, max_news):
-    eng = ServeEngine(params, cfg, n_slots=4, max_len=96, eos_id=1,
-                      kv_layout="paged", block_size=16)
-    reqs = [Request(i, p.copy(), max_new_tokens=n, sampler=s)
-            for i, (p, s, n) in enumerate(zip(prompts, samplers, max_news))]
-    for r in reqs:
-        eng.submit(r)
-    t0 = time.perf_counter()
-    stats = eng.run()
-    return reqs, stats, time.perf_counter() - t0, eng
+from repro.serve.api import LLM
+from repro.serve.params import SamplingParams
 
 
 def main():
-    cfg = smoke_config(ARCHS["qwen3-0.6b"])
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    llm = LLM.from_arch("qwen3-0.6b", smoke=True, n_slots=4, max_len=96,
+                        eos_id=1, kv_layout="paged", block_size=16)
+    cfg = llm.cfg
 
     rng = np.random.default_rng(0)
     n_req = 12
     prompts = [rng.integers(0, cfg.vocab_size,
                             int(rng.integers(4, 24))).astype(np.int32)
                for _ in range(n_req)]
-    max_news = [int(rng.integers(4, 12)) for _ in range(n_req)]
-    # mixed queue: greedy comparator / top-4 comparator bus / Gumbel-max
-    samplers = [TopK(4, temperature=0.8) if rid % 3 == 0
-                else Temperature(0.8) if rid % 3 == 1
-                else Greedy()
-                for rid in range(n_req)]
+    # mixed queue, all through SamplingParams: greedy comparator /
+    # top-4 comparator bus / full-vocab Gumbel-max temperature
+    plist = [SamplingParams(max_new_tokens=int(rng.integers(4, 12)),
+                            **({"top_k": 4, "temperature": 0.8}
+                               if rid % 3 == 0 else
+                               {"head_mode": "temperature",
+                                "temperature": 0.8}
+                               if rid % 3 == 1 else {}))
+             for rid in range(n_req)]
 
-    reqs, stats, dt, eng = serve(params, cfg, prompts, samplers, max_news)
-    alloc = eng.store.allocator
-    print(f"served {n_req} requests in {dt:.2f}s with {eng.n_slots} slots")
+    t0 = time.perf_counter()
+    outs = llm.generate(prompts, plist)
+    dt = time.perf_counter() - t0
+    stats = llm.stats
+    kv = llm.kv_usage()
+    print(f"served {n_req} requests in {dt:.2f}s "
+          f"({llm.engine.n_slots} slots, paged KV)")
     print(f"stats: {stats}")
-    print(f"paged KV pool: {alloc.num_blocks} blocks x "
-          f"{eng.store.block_size} tokens, {alloc.n_free} free at exit")
-    tput = stats["decode_steps"] / dt
-    print(f"engine decode steps/s: {tput:.1f} "
-          f"(greedy head unit: argmax only — zero exp/div, Theorem 1)")
-    print(f"fused ragged decode: {stats['decode_steps']} jitted calls over "
-          f"{stats['iterations']} iterations "
+    print(f"kv pool: {kv['num_blocks']} blocks x {kv['block_size']} "
+          f"tokens, {kv['blocks_free']} free at exit")
+    print(f"fused ragged decode: {stats['decode_steps']} jitted calls "
+          f"over {stats['iterations']} iterations "
           f"({stats['fused_rows'] / max(stats['decode_steps'], 1):.2f} "
           "rows/step; mixed samplers + staggered positions, one call each)")
-    for r in reqs:
-        print(f"  rid={r.rid:2d} {type(r.sampler).__name__:11s} "
-              f"prompt={len(r.prompt):2d} generated={len(r.generated):2d} "
-              f"finish={r.finish_reason}")
+    for o in outs:
+        kind = ("top-k" if o.params.top_k > 1 else
+                "gumbel" if o.params.head_mode == "temperature" else
+                "greedy")
+        print(f"  rid={o.rid:2d} {kind:6s} prompt={len(o.prompt_token_ids):2d} "
+              f"generated={len(o.token_ids):2d} finish={o.finish_reason:6s} "
+              f"ttft={o.timing.ttft_ms:6.1f}ms  {o.timing.tok_s:6.1f} tok/s")
     assert stats["completed"] == n_req
     assert stats["decode_steps"] == stats["iterations"]  # ONE call/iter
-    assert all(r.finish_reason in ("eos", "length", "max_len")
-               for r in reqs)
-    assert alloc.n_free == alloc.num_blocks  # every block returned
+    assert all(o.finish_reason in ("eos", "length", "max_len")
+               for o in outs)
+    assert kv["blocks_free"] == kv["num_blocks"]  # every block returned
 
-    # Theorem 1 live: the SAME trace, greedy everywhere, served through
-    # the reduced comparator and the full softmax unit — token-identical.
-    grd, _, _, _ = serve(params, cfg, prompts, [Greedy()] * n_req, max_news)
-    soft, _, _, _ = serve(params, cfg, prompts,
-                          [SoftmaxBaseline()] * n_req, max_news)
-    same = [g.generated == s.generated for g, s in zip(grd, soft)]
+    # Streaming: chunks arrive while a SECOND request is still in
+    # flight, with the top-4 candidate bus riding along.
+    it = llm.stream(prompts[0], SamplingParams(max_new_tokens=8,
+                                               n_candidates=4))
+    other = llm.submit(prompts[1], SamplingParams(max_new_tokens=8))
+    first = next(it)
+    in_flight = not other.done             # captured AT first-chunk time
+    assert first.finish_reason is None     # incremental: arrived mid-flight
+    rest = list(it)
+    print(f"\nstreamed rid={first.rid}: first chunk token={first.token} "
+          f"candidates={first.candidate_ids} arrived with "
+          f"{'another request in flight' if in_flight else 'queue idle'}")
+    print(f"  {1 + len(rest)} chunks, final finish="
+          f"{rest[-1].finish_reason}")
+    llm._drive_until(lambda: other.done)
+
+    # Stop sequences: replay a greedy generation with its tokens [1:3]
+    # as the stop sequence — terminates early with finish_reason='stop'.
+    probe = llm.generate(prompts[2], SamplingParams(max_new_tokens=8))[0]
+    stop = probe.token_ids[1:3]
+    stopped = llm.generate(
+        prompts[2], SamplingParams(max_new_tokens=8, stop=[stop]))[0]
+    print(f"stop sequence {stop}: finished '{stopped.finish_reason}' "
+          f"after {len(stopped.token_ids)} tokens "
+          f"(unstopped: {len(probe.token_ids)})")
+    assert stopped.finish_reason == "stop"
+    assert stopped.token_ids == probe.token_ids[:3]
+
+    # Theorem 1 at the API level: the SAME prompts, greedy, through the
+    # reduced comparator and the full softmax unit — token-identical.
+    grd = llm.generate(prompts, SamplingParams(max_new_tokens=8,
+                                               head_mode="reduced"))
+    soft = llm.generate(prompts, SamplingParams(max_new_tokens=8,
+                                                head_mode="softmax"))
+    same = [g.token_ids == s.token_ids for g, s in zip(grd, soft)]
     print(f"reduced vs softmax generations identical: "
           f"{sum(same)}/{n_req} requests")
     assert all(same), "Theorem 1 violated: reduced != softmax tokens"

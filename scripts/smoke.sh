@@ -12,8 +12,8 @@ python -m pytest -x -q \
     tests/test_substrate.py::test_serve_engine_continuous_batching \
     tests/test_substrate.py::test_serve_reduced_equals_softmax_generations
 
-echo "== serve smoke (paged KV, reduced head, mixed greedy/top-k) =="
-timeout 120 python examples/serve_demo.py
+echo "== serve smoke (LLM facade: generate/stream/stop, mixed heads) =="
+timeout 240 python examples/serve_demo.py
 
 echo "== ragged fused-step smoke (staggered lengths; one jitted call per"
 echo "   iteration; reduced == softmax token-identical) =="
@@ -43,5 +43,9 @@ for mode in ("reduced", "softmax"):
 assert outs["reduced"] == outs["softmax"], "Theorem 1 violated (ragged)"
 print("RAGGED SMOKE OK: one fused step per iteration, reduced == softmax")
 EOF
+
+echo "== HTTP smoke (SSE frontend: streamed == non-streamed, reduced =="
+echo "   softmax over the wire, stats contract) =="
+timeout 300 bash scripts/http_smoke.sh
 
 echo "SMOKE OK"

@@ -3,7 +3,13 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --requests 8 --slots 4 \
       [--head-mode reduced|softmax|fused|sharded|temperature] \
-      [--kv-layout paged|dense] [--top-k 4 --temperature 0.8]
+      [--kv-layout paged|dense] [--top-k 4 --temperature 0.8] \
+      [--serve-http 8000]
+
+``--serve-http PORT`` swaps the batch run for the network frontend
+(serve/server.py): an SSE ``POST /v1/completions`` + ``GET /v1/stats``
+HTTP server over the ``LLM`` facade, engine pumped from a background
+thread — per-request SamplingParams arrive in the request body.
 
 The head spec resolves to a ``Sampler`` (serve/sampler.py) — the engine,
 the model API and this driver all consume the object; no head_mode
@@ -57,6 +63,11 @@ def main():
                          "iteration over all slots (default); cohort: "
                          "the PR 2 position-cohort baseline")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
+                    help="instead of the batch run: start the SSE HTTP "
+                         "frontend (POST /v1/completions, GET /v1/stats) "
+                         "on this port and serve until interrupted")
+    ap.add_argument("--http-host", default="127.0.0.1")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -71,6 +82,17 @@ def main():
         # batch size tracks the active-slot count, so the batch stays
         # replicated.
         mesh = mesh_mod.make_host_mesh(model=len(jax.devices()))
+    if args.serve_http is not None:
+        from repro.serve.api import LLM
+        from repro.serve.server import serve_forever
+
+        llm = LLM(params, cfg, n_slots=args.slots, max_len=args.max_len,
+                  eos_id=1, head_mode=args.head_mode,
+                  kv_layout=args.kv_layout, block_size=args.block_size,
+                  num_blocks=args.num_blocks, scheduler=args.scheduler,
+                  mesh=mesh, seed=args.seed)
+        serve_forever(llm, host=args.http_host, port=args.serve_http)
+        return
     eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=args.max_len,
                       eos_id=1, head_mode=args.head_mode,
                       kv_layout=args.kv_layout, block_size=args.block_size,

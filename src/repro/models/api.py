@@ -145,15 +145,31 @@ def serve_prefill_paged(params, cfg: ModelConfig, batch: dict,
     return s.head(params, cfg, h), new_pools, dense_leaves
 
 
+def _warn_topk_alias(name: str) -> None:
+    """One DeprecationWarning per process per alias — the pre-Sampler
+    entry points survive only as shims over the Sampler-protocol path."""
+    if name not in _warned_topk_aliases:
+        _warned_topk_aliases.add(name)
+        import warnings
+
+        warnings.warn(
+            f"{name}() is deprecated: pass TopK(k, head_mode=...) (or a "
+            "SamplingParams with top_k=k) to serve_prefill/serve_decode "
+            "instead", DeprecationWarning, stacklevel=3)
+
+
+_warned_topk_aliases: set = set()
+
+
 def serve_topk_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
                        k: int, head_mode="reduced"):
-    """Prompt pass, k-winner head: ((vals (B,k), idxs (B,k)), cache).
-
-    k=1 is honored (a (B, 1) comparator bus), matching the legacy
-    contract this wrapper preserves.
+    """Deprecated alias for ``serve_prefill(..., TopK(k, head_mode=...))``:
+    ((vals (B,k), idxs (B,k)), cache).  k=1 is honored (a (B, 1)
+    comparator bus), matching the legacy contract this shim preserves.
     """
     from repro.serve.sampler import TopK
 
+    _warn_topk_alias("serve_topk_prefill")
     return serve_prefill(params, cfg, batch, max_len,
                          TopK(k, head_mode=head_mode))
 
@@ -161,9 +177,11 @@ def serve_topk_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
 def serve_topk_decode(params, cfg: ModelConfig, token: jax.Array, cache,
                       pos: jax.Array, k: int, head_mode="reduced", *,
                       block_tables: Optional[jax.Array] = None):
-    """One token step, k-winner head: ((vals, idxs), new_cache)."""
+    """Deprecated alias for ``serve_decode(..., TopK(k, head_mode=...))``:
+    ((vals, idxs), new_cache)."""
     from repro.serve.sampler import TopK
 
+    _warn_topk_alias("serve_topk_decode")
     return serve_decode(params, cfg, token, cache, pos,
                         TopK(k, head_mode=head_mode),
                         block_tables=block_tables)

@@ -45,9 +45,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +58,9 @@ from repro.configs.base import ModelConfig
 from repro.models import api, lm
 from repro.parallel import env
 from repro.serve import sampler as sampler_mod
+from repro.serve.outputs import TokenChunk
 from repro.serve.paged_kv import PagedKVStore, pow2 as _pow2
+from repro.serve.params import SamplingParams
 from repro.serve.sampler import MAX_TOP_K, Sampler  # re-exported
 
 
@@ -147,20 +150,35 @@ class Request:
     max_new_tokens: int = 16
     top_k: int = 1                     # 1 = greedy (the pure comparator)
     temperature: float = 1.0
+    # the typed sampling surface; None -> synthesized at submit from the
+    # legacy kwargs above.  When given, params IS the source of truth
+    # (the legacy fields are mirrored from it).
+    params: Optional[SamplingParams] = None
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
     # why generation stopped: 'eos' | 'length' (max_new_tokens) |
+    # 'stop' (a params.stop sequence matched the generated tail) |
     # 'max_len' (slot ran into the engine's cache ceiling — the request
-    # was truncated short of its max_new_tokens).
+    # was truncated short of its max_new_tokens) | 'cancelled'
+    # (engine.cancel, e.g. a streaming client disconnected).
     finish_reason: Optional[str] = None
-    # per-request sampling RNG, seeded (engine seed, rid) at submit: the
-    # nth emitted token consumes the nth draw regardless of scheduling
-    # (deferral, preemption), so sampled generations are reproducible
-    # per request.
+    # per-request sampling RNG, seeded (params.seed, or (engine seed,
+    # rid)) at submit: the nth emitted token consumes the nth draw
+    # regardless of scheduling (deferral, preemption), so sampled
+    # generations are reproducible per request.
     rng: Optional[np.random.Generator] = None
-    # explicit Sampler; None -> resolved at submit from the engine's
-    # head_mode plus this request's top_k/temperature.
+    # explicit Sampler; None -> resolved at submit from params plus the
+    # engine's default head_mode.
     sampler: Optional[Sampler] = None
+    # the prompt as submitted (preemption folds generated tokens into
+    # ``prompt`` for the re-prefill; this keeps the user's original).
+    orig_prompt: Optional[np.ndarray] = None
+    # wall-clock stamps (time.perf_counter seconds), set by the engine:
+    # submit / first prefill start / first token / final token.
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
 
 
 class ServeEngine:
@@ -204,13 +222,42 @@ class ServeEngine:
         # served across those calls, so benches can report rows-per-step.
         self.stats = {"prefills": 0, "decode_steps": 0, "iterations": 0,
                       "fused_rows": 0, "completed": 0, "deferred": 0,
-                      "preemptions": 0}
+                      "preemptions": 0, "cancelled": 0}
+        # per-token event consumers: every emitted token — prefill head
+        # or fused decode step — is delivered as a TokenChunk, with
+        # finish_reason set on a request's final chunk.  The LLM facade
+        # and the SSE server are consumers; tests register their own.
+        self._consumers: List[Callable[[TokenChunk], None]] = []
+
+    # -- event consumers -----------------------------------------------------
+    def add_consumer(self, fn: Callable[[TokenChunk], None]) -> None:
+        self._consumers.append(fn)
+
+    def remove_consumer(self, fn: Callable[[TokenChunk], None]) -> None:
+        self._consumers.remove(fn)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
 
     # -- queue management ----------------------------------------------------
     def submit(self, req: Request):
+        if req.params is None:
+            # legacy surface: synthesize the typed params from the loose
+            # kwargs so every downstream consumer sees ONE source of truth
+            req.params = SamplingParams(max_new_tokens=req.max_new_tokens,
+                                        temperature=req.temperature,
+                                        top_k=req.top_k)
+        else:
+            # params given: mirror into the legacy fields (engine
+            # internals and old call sites read max_new_tokens et al.)
+            req.max_new_tokens = req.params.max_new_tokens
+            req.top_k = req.params.top_k
+            req.temperature = req.params.temperature
         if req.sampler is None:
             req.sampler = sampler_mod.resolve(
-                self.head_mode, req.top_k, req.temperature, cfg=self.cfg)
+                req.params, cfg=self.cfg,
+                default_head_mode=self.head_mode)
         else:
             req.sampler.validate(self.cfg)
         if req.sampler.needs_mesh and self.mesh is None:
@@ -229,8 +276,38 @@ class ServeEngine:
                 f"max_len={self.max_len}; generation will stop early "
                 "with finish_reason='max_len'", stacklevel=2)
         if req.rng is None:
-            req.rng = np.random.default_rng([self.seed, req.rid])
+            # params.seed pins the request's private RNG stream; the
+            # (engine seed, rid) default keeps distinct requests distinct
+            req.rng = np.random.default_rng(
+                req.params.seed if req.params.seed is not None
+                else [self.seed, req.rid])
+        if req.orig_prompt is None:
+            req.orig_prompt = np.asarray(req.prompt, np.int32).copy()
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
+
+    def cancel(self, req: Request) -> bool:
+        """Abort an unfinished request: free its slot's blocks (or drop
+        it from the queue) and finish it with ``finish_reason=
+        'cancelled'``.  The serving frontend calls this when a streaming
+        client disconnects — otherwise the request would decode to
+        max_new_tokens holding a slot nobody reads."""
+        if req.done:
+            return False
+        for i, s in enumerate(self.slots):
+            if s is req:
+                self._release_slot(i)
+                break
+        else:
+            try:
+                self.queue.remove(req)
+            except ValueError:
+                return False              # unknown request
+        req.finish_reason = "cancelled"
+        req.t_done = time.perf_counter()
+        req.done = True
+        self.stats["cancelled"] += 1
+        return True
 
     def _free_slots(self):
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -257,6 +334,8 @@ class ServeEngine:
                 self.stats["deferred"] += 1
                 break
             self.queue.popleft()
+            if req.t_admit is None:       # re-prefill keeps the first stamp
+                req.t_admit = time.perf_counter()
             plen = self.store.prefill_len(S)
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
             dev = req.sampler.device_form()
@@ -275,11 +354,10 @@ class ServeEngine:
                     out, cache1 = fn(self.params, batch)
                     self.store.admit(i, jax.tree.flatten(cache1)[0], S)
             self.stats["prefills"] += 1
-            req.generated.append(req.sampler.pick(_to_host(out), 0, req.rng))
             self.slots[i] = req
             self.slot_pos[i] = S
             self.admit_order.append(i)
-            self._check_done(i)
+            self._emit(i, req, _to_host(out), 0)
             if budget is not None:
                 budget -= 1
 
@@ -395,9 +473,8 @@ class ServeEngine:
             i = padded[r]
             dev, off = where[r]
             req = self.slots[i]
-            req.generated.append(req.sampler.pick(host[dev], off, req.rng))
             self.slot_pos[i] += 1
-            self._check_done(i)
+            self._emit(i, req, host[dev], off)
 
     def _ensure_blocks(self, i: int, pos: int) -> bool:
         """Grow slot i's block table to cover ``pos``; preempt the
@@ -417,11 +494,44 @@ class ServeEngine:
         self.slots[i] = None
         self.admit_order.remove(i)
 
+    def _emit(self, i: int, req: Request, host_out, off: int):
+        """One token emission: pick on the host, stop-sequence match,
+        completion check, then deliver a TokenChunk to every consumer
+        (with finish_reason set when this token finished the request)."""
+        tok = req.sampler.pick(host_out, off, req.rng)
+        req.generated.append(tok)
+        if req.t_first is None:
+            req.t_first = time.perf_counter()
+        # stop-sequence matching at emission time, against the generated
+        # tail — a sequence whose prefix landed in an earlier step
+        # completes here for free (partial matches span step boundaries)
+        for s in req.params.stop:
+            if len(req.generated) >= len(s) \
+                    and tuple(req.generated[-len(s):]) == s:
+                req.finish_reason = "stop"
+                break
+        self._check_done(i)
+        if self._consumers:
+            cands = None
+            if req.params.n_candidates:
+                c = req.sampler.candidate_ids(host_out, off)
+                if c is not None:
+                    cands = tuple(int(x)
+                                  for x in c[:req.params.n_candidates])
+            chunk = TokenChunk(rid=req.rid, token=int(tok),
+                               index=len(req.generated) - 1,
+                               finish_reason=req.finish_reason,
+                               candidate_ids=cands)
+            for fn in list(self._consumers):
+                fn(chunk)
+
     def _check_done(self, i: int):
         req = self.slots[i] if self.slots[i] else None
         if req is None:
             return
-        if req.generated and req.generated[-1] == self.eos_id:
+        if req.finish_reason == "stop":
+            pass                      # a params.stop sequence matched
+        elif req.generated and req.generated[-1] == self.eos_id:
             req.finish_reason = "eos"
         elif len(req.generated) >= req.max_new_tokens:
             req.finish_reason = "length"
@@ -431,6 +541,10 @@ class ServeEngine:
             req.finish_reason = "max_len"
         else:
             return
+        # stamp BEFORE done=True: unsynchronized readers (the facade's
+        # pump mode polls req.done without the engine lock) must never
+        # observe done with t_done still unset
+        req.t_done = time.perf_counter()
         req.done = True
         self.stats["completed"] += 1
         self._release_slot(i)     # blocks back to the free list

@@ -136,16 +136,43 @@ class PagedKVStore:
     def any_paged(self) -> bool:
         return any(self.paged_mask)
 
+    def usage(self) -> dict:
+        """Pool occupancy snapshot (JSON-ready) — surfaced by the HTTP
+        server's /v1/stats next to the engine counters."""
+        a = self.allocator
+        return {
+            "layout": "paged" if self.any_paged else "dense",
+            "block_size": self.block_size,
+            "num_blocks": a.num_blocks,
+            "blocks_free": a.n_free,
+            "blocks_in_use": a.num_blocks - a.n_free,
+            "paged_leaves": sum(self.paged_mask),
+            "dense_leaves": len(self.paged_mask) - sum(self.paged_mask),
+        }
+
     # -- block accounting ----------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size) if self.any_paged else 0
+
+    def _blocks_needed(self, prompt_len: int) -> int:
+        """Admission cost: the prompt's block cover plus one decode
+        block, capped at a slot's worst case — the ONE accounting rule
+        shared by free-now and could-ever admission checks."""
+        return min(self.blocks_for(prompt_len) + 1, self.max_blocks_per_slot)
 
     def can_admit(self, prompt_len: int) -> bool:
         """Enough free blocks for the prompt plus one decode block."""
         if not self.any_paged:
             return True
-        need = min(self.blocks_for(prompt_len) + 1, self.max_blocks_per_slot)
-        return self.allocator.n_free >= need
+        return self.allocator.n_free >= self._blocks_needed(prompt_len)
+
+    def can_ever_admit(self, prompt_len: int) -> bool:
+        """Whether the prompt could be admitted with EVERY block free —
+        False means the engine would MemoryError once it reaches the
+        queue head; long-lived frontends reject at submit instead."""
+        if not self.any_paged:
+            return True
+        return self.allocator.num_blocks >= self._blocks_needed(prompt_len)
 
     def prefill_len(self, prompt_len: int) -> int:
         """Padded cache length a prefill should build for this prompt.

@@ -1,0 +1,98 @@
+"""SamplingParams: the typed per-request sampling surface.
+
+The engine used to take loose kwargs on ``Request`` (``top_k``,
+``temperature``, ``max_new_tokens``) with the head choice fixed
+engine-wide.  ``SamplingParams`` is the one frozen, hashable object a
+caller attaches to a request — and the single thing
+``sampler.resolve()`` consumes to pick the head variant:
+
+  top_k == 1        greedy: the reduced comparator (argmax over h @ W,
+                    no exp / sum / divide — the paper's unit).
+  top_k > 1         the k-winner comparator bus + an O(k) host softmax
+                    at ``temperature`` over the survivors.
+  head_mode         per-request override of the engine default:
+                    'reduced' | 'fused' | 'sharded' | 'softmax' |
+                    'temperature' (full-vocab Gumbel-max).  None keeps
+                    the engine's head.
+  seed              per-request RNG stream: the nth emitted token
+                    consumes the nth draw whatever the scheduling
+                    (deferral, preemption), so sampled generations are
+                    reproducible per request.  None derives the stream
+                    from (engine seed, rid).
+  stop              stop token SEQUENCES, matched host-side against the
+                    generated tail at every emission (partial matches
+                    span step boundaries for free); a hit finishes the
+                    request with ``finish_reason='stop'``, stop tokens
+                    included in the output.
+  n_candidates      > 0 ships the top-n "logprob-free" candidate ids
+                    from the reduced top-k kernel with every token
+                    (``TokenChunk.candidate_ids``) — the comparator-bus
+                    answer to logprobs: ranked alternatives, no
+                    probabilities anywhere.  Sampling still draws from
+                    the first ``top_k`` survivors only.
+
+Frozen + hashable on purpose: params ride into jit-cache keys via the
+resolved Sampler, and a shared default instance is safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+StopSpec = Union[int, Sequence[int], Sequence[Sequence[int]], None]
+
+
+def _normalize_stop(stop: StopSpec) -> Tuple[Tuple[int, ...], ...]:
+    """Accept an int, one sequence of ints, or a list of sequences —
+    always store a tuple of non-empty int tuples."""
+    if stop is None:
+        return ()
+    ints = (int, np.integer)           # token slices are np.int32 arrays
+    if isinstance(stop, ints):
+        return ((int(stop),),)
+    stop = list(stop)
+    if not stop:
+        return ()
+    if all(isinstance(t, ints) for t in stop):
+        stop = [stop]
+    out = []
+    for s in stop:
+        s = (int(s),) if isinstance(s, ints) else tuple(int(t) for t in s)
+        if not s:
+            raise ValueError("empty stop sequence")
+        out.append(s)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (see module docstring for semantics)."""
+    max_new_tokens: int = 16
+    temperature: float = 1.0
+    top_k: int = 1
+    seed: Optional[int] = None
+    stop: StopSpec = ()
+    head_mode: Optional[str] = None
+    n_candidates: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "stop", _normalize_stop(self.stop))
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens={self.max_new_tokens}: must be >= 1")
+        if self.top_k < 1:
+            raise ValueError(f"top_k={self.top_k}: must be >= 1 "
+                             "(1 = greedy, the pure comparator)")
+        if self.n_candidates < 0:
+            raise ValueError(
+                f"n_candidates={self.n_candidates}: must be >= 0")
+
+    @property
+    def greedy(self) -> bool:
+        """True when token choice is deterministic argmax — the case
+        Theorem 1 covers bit-exactly."""
+        if self.head_mode == "temperature":
+            return self.temperature <= 0.0
+        return self.top_k == 1 or self.temperature <= 0.0

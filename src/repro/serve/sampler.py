@@ -55,6 +55,7 @@ from repro.configs.base import ModelConfig
 from repro.core import reduced_softmax
 from repro.models import lm
 from repro.models.layers import cdtype
+from repro.serve.params import SamplingParams
 
 # The k-winner comparator unrolls k selection passes (kernel scratch is
 # (Bt, k)); beyond this bound compile time explodes and the O(k)-softmax
@@ -76,6 +77,13 @@ class Sampler:
     def pick(self, out, row: int, rng=None) -> int:
         """Host-side: head output row -> token id."""
         raise NotImplementedError
+
+    def candidate_ids(self, out, row: int):
+        """Host-side: ranked candidate token ids for this row, or None
+        when the head output carries no candidate bus.  Only the
+        k-winner comparator ships one — "logprob-free" alternatives:
+        ranked ids with no probabilities anywhere."""
+        return None
 
     def validate(self, cfg: ModelConfig) -> None:
         """Raise ValueError for configurations this sampler cannot serve."""
@@ -155,10 +163,16 @@ class TopK(Sampler):
 
     temperature <= 0 degenerates to the greedy comparator exactly
     (survivor 0 is the argmax, lowest index among ties).
+
+    ``sample_k`` (host-only) draws from the first ``sample_k`` survivors
+    while the bus still ships all ``k`` — how a request asks for top-k
+    "logprob-free" candidate ids wider than its sampling pool
+    (``SamplingParams.n_candidates``); ``sample_k=1`` is exact greedy.
     """
     k: int
     temperature: float = 1.0
     head_mode: str = "reduced"
+    sample_k: Optional[int] = None
 
     def validate(self, cfg: ModelConfig) -> None:
         k_cap = min(MAX_TOP_K, cfg.vocab_size)
@@ -167,6 +181,9 @@ class TopK(Sampler):
                 f"top_k={self.k} out of range [1, {k_cap}] "
                 f"(min(MAX_TOP_K={MAX_TOP_K}, vocab_size="
                 f"{cfg.vocab_size}))")
+        if self.sample_k is not None and not 1 <= self.sample_k <= self.k:
+            raise ValueError(f"sample_k={self.sample_k} out of range "
+                             f"[1, k={self.k}]")
         if self.head_mode not in ("reduced", "fused"):
             # the 'softmax' baseline and 'sharded' head have no top-k
             # form yet — reject rather than silently substituting the
@@ -176,7 +193,9 @@ class TopK(Sampler):
                 f"{self.head_mode!r}; use 'reduced' or 'fused'")
 
     def device_form(self) -> "Sampler":
-        return dataclasses.replace(self, temperature=1.0)
+        # temperature and sample_k are host-only: strip both so requests
+        # that differ only there share one compiled step and head group.
+        return dataclasses.replace(self, temperature=1.0, sample_k=None)
 
     def head(self, params, cfg: ModelConfig, h: jax.Array):
         return reduced_softmax.fused_reduced_topk(
@@ -185,14 +204,18 @@ class TopK(Sampler):
 
     def pick(self, out, row: int, rng=None) -> int:
         vals, idxs = out
-        vals = np.asarray(vals[row], np.float32)
-        idxs = np.asarray(idxs[row])
-        if self.temperature <= 0.0:
+        n = self.k if self.sample_k is None else self.sample_k
+        vals = np.asarray(vals[row], np.float32)[:n]
+        idxs = np.asarray(idxs[row])[:n]
+        if self.temperature <= 0.0 or n == 1:
             return int(idxs[0])
         z = vals / self.temperature
         p = np.exp(z - z.max())
         p /= p.sum()
         return int(rng.choice(idxs, p=p))
+
+    def candidate_ids(self, out, row: int):
+        return np.asarray(out[1][row])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,17 +256,36 @@ def canonical_order(samplers) -> list:
     return sorted(samplers, key=repr)
 
 
-def resolve(spec: Union[str, Sampler], top_k: int = 1,
+def resolve(spec: Union[str, Sampler, "SamplingParams"], top_k: int = 1,
             temperature: float = 1.0, *,
-            cfg: Optional[ModelConfig] = None) -> Sampler:
+            cfg: Optional[ModelConfig] = None,
+            default_head_mode: str = "reduced") -> Sampler:
     """Map a head spec onto a Sampler — the one string switch left.
 
-    ``spec`` is either a Sampler (returned as-is, validated) or a legacy
-    ``head_mode`` string: 'reduced' | 'fused' | 'sharded' | 'softmax' |
-    'temperature'.  ``top_k > 1`` selects the k-winner bus where the
-    head supports it.  Pass ``cfg`` to validate against the model.
+    ``spec`` is a ``SamplingParams`` (the typed per-request surface —
+    its ``head_mode`` overrides ``default_head_mode``, its
+    top_k/temperature/n_candidates select the head form), a Sampler
+    (returned as-is, validated), or a legacy ``head_mode`` string:
+    'reduced' | 'fused' | 'sharded' | 'softmax' | 'temperature'.
+    ``top_k > 1`` selects the k-winner bus where the head supports it.
+    Pass ``cfg`` to validate against the model.
     """
-    if isinstance(spec, Sampler):
+    if isinstance(spec, SamplingParams):
+        p = spec
+        mode = p.head_mode if p.head_mode is not None else default_head_mode
+        if p.n_candidates == 0:
+            return resolve(mode, p.top_k, p.temperature, cfg=cfg)
+        # candidate ids ride the k-winner comparator bus: ship
+        # max(top_k, n_candidates) survivors, sample from the first
+        # top_k only (sample_k=1 is exact greedy — Theorem 1 holds).
+        if mode not in ("reduced", "fused"):
+            raise ValueError(
+                f"n_candidates={p.n_candidates} needs the k-winner "
+                f"comparator bus (head_mode 'reduced' or 'fused'), not "
+                f"{mode!r}")
+        s = TopK(max(p.top_k, p.n_candidates), p.temperature, mode,
+                 sample_k=p.top_k)
+    elif isinstance(spec, Sampler):
         s = spec
     elif top_k < 1:
         # the seed engine rejected any top_k outside [1, cap]; keep the

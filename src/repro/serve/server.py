@@ -1,0 +1,152 @@
+"""SSE HTTP frontend over the LLM facade — stdlib ``http.server`` only.
+
+The network shape the reduced unit is built for: the comparator head
+emits the token id directly on device, so the only thing that ever
+crosses the wire per step is that id (plus, optionally, the k-winner
+candidate bus) — no distribution is materialized anywhere between the
+accelerator and the client.
+
+Endpoints:
+
+  POST /v1/completions      body: {"prompt": [token ids],
+                                   "max_new_tokens": int,
+                                   "temperature": float, "top_k": int,
+                                   "seed": int, "stop": [[ids], ...],
+                                   "head_mode": str,
+                                   "n_candidates": int,
+                                   "stream": bool}
+        stream=false -> one JSON RequestOutput (token_ids,
+                        finish_reason, timing).
+        stream=true  -> Server-Sent Events: one ``data: {...}`` line per
+                        TokenChunk as the engine emits it, terminated by
+                        ``data: [DONE]``.
+
+  GET /v1/stats             engine counters (prefills, decode_steps,
+                            iterations, fused_rows, completed,
+                            deferred, preemptions) + KV-pool usage.
+
+Requests are served by a ``ThreadingHTTPServer``: handler threads only
+submit and read per-request chunk queues; the engine itself runs on the
+LLM's background pump thread, so concurrent streamed and non-streamed
+completions interleave inside the same continuous batch.
+"""
+from __future__ import annotations
+
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.serve.api import LLM
+from repro.serve.params import SamplingParams
+
+_PARAM_KEYS = ("max_new_tokens", "temperature", "top_k", "seed", "stop",
+               "head_mode", "n_candidates")
+
+
+def params_from_json(body: dict) -> SamplingParams:
+    kw = {k: body[k] for k in _PARAM_KEYS if body.get(k) is not None}
+    return SamplingParams(**kw)
+
+
+def _chunk_json(chunk) -> dict:
+    d = {"rid": chunk.rid, "token": chunk.token, "index": chunk.index,
+         "finish_reason": chunk.finish_reason}
+    if chunk.candidate_ids is not None:
+        d["candidate_ids"] = list(chunk.candidate_ids)
+    return d
+
+
+class _Handler(BaseHTTPRequestHandler):
+    llm: LLM = None            # bound by make_server
+    quiet: bool = True
+
+    # -- plumbing ------------------------------------------------------------
+    def log_message(self, fmt, *args):
+        if not self.quiet:
+            super().log_message(fmt, *args)
+
+    def _json(self, code: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    # -- endpoints -----------------------------------------------------------
+    def do_GET(self):
+        if self.path != "/v1/stats":
+            return self._json(404, {"error": f"unknown path {self.path}"})
+        self._json(200, {"engine": self.llm.stats,
+                         "kv": self.llm.kv_usage()})
+
+    def do_POST(self):
+        if self.path != "/v1/completions":
+            return self._json(404, {"error": f"unknown path {self.path}"})
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(n) or b"{}")
+            prompt = body.get("prompt")
+            if not isinstance(prompt, list) or not prompt \
+                    or not all(isinstance(t, int) for t in prompt):
+                raise ValueError(
+                    "'prompt' must be a non-empty list of token ids "
+                    "(the server is tokenizer-free)")
+            params = params_from_json(body)
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            return self._json(400, {"error": str(e)})
+        try:
+            if body.get("stream"):
+                # submit (and validate params/prompt) BEFORE any headers
+                # go out: a resolve error must be a clean 400, not bytes
+                # inside an already-open 200 event stream
+                it = self.llm.stream(prompt, params)
+                return self._stream(it)
+            out = self.llm.generate([prompt], params)[0]
+            self._json(200, out.as_dict())
+        except ValueError as e:           # bad params/config combination
+            self._json(400, {"error": str(e)})
+
+    def _stream(self, it) -> None:
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        try:
+            for chunk in it:
+                self.wfile.write(
+                    b"data: " + json.dumps(_chunk_json(chunk)).encode()
+                    + b"\n\n")
+                self.wfile.flush()
+            self.wfile.write(b"data: [DONE]\n\n")
+            self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            pass           # client went away; close() below cancels
+        finally:
+            it.close()     # unfinished -> engine.cancel via the facade
+
+
+def make_server(llm: LLM, host: str = "127.0.0.1", port: int = 8000,
+                quiet: bool = True) -> ThreadingHTTPServer:
+    """Bind (but don't run) the SSE server.  Starts the LLM's background
+    engine pump — handler threads never step the engine inline.  Pass
+    port=0 for an ephemeral port (``server.server_address``)."""
+    handler = type("Handler", (_Handler,), {"llm": llm, "quiet": quiet})
+    srv = ThreadingHTTPServer((host, port), handler)
+    llm.start_pump()
+    return srv
+
+
+def serve_forever(llm: LLM, host: str = "127.0.0.1",
+                  port: int = 8000) -> None:
+    srv = make_server(llm, host, port)
+    h, p = srv.server_address[:2]
+    print(f"serving on http://{h}:{p}  "
+          f"(POST /v1/completions, GET /v1/stats)", flush=True)
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.shutdown()
+        llm.stop_pump()

@@ -1,0 +1,361 @@
+"""The serving frontend: SamplingParams/RequestOutput, the LLM facade,
+and the SSE HTTP server.
+
+Covers the API-level form of the paper's claims and the event-driven
+engine lifecycle:
+
+  - ``SamplingParams`` normalization/validation, and ``resolve()``
+    consuming it (head_mode override, top-k bus, candidate ids);
+  - stop sequences: ``finish_reason='stop'`` with partial matches
+    spanning fused-step boundaries;
+  - per-request ``seed`` reproducibility under deferral/preemption;
+  - ``LLM.generate`` order-preserving with timing, and reduced ==
+    softmax greedy tokens through the facade (Theorem 1 at API level);
+  - ``LLM.stream`` yielding incrementally while a second request is in
+    flight;
+  - the HTTP server round-tripping streamed == non-streamed tokens;
+  - the deprecated ``serve_topk_*`` aliases warning once.
+"""
+import json
+import threading
+import urllib.request
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import lm
+from repro.serve.api import LLM
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.outputs import RequestOutput
+from repro.serve.params import SamplingParams
+from repro.serve.sampler import Greedy, SoftmaxBaseline, TopK, resolve
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk(arch="qwen3-0.6b", key=KEY):
+    cfg = smoke_config(ARCHS[arch])
+    return cfg, lm.init_params(cfg, key)
+
+
+def _prompts(cfg, n, seed=0, lo=4, hi=20):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# SamplingParams + resolve
+# ---------------------------------------------------------------------------
+def test_sampling_params_normalization_and_validation():
+    assert SamplingParams(stop=7).stop == ((7,),)
+    assert SamplingParams(stop=[3, 4]).stop == ((3, 4),)           # one seq
+    assert SamplingParams(stop=[[3, 4], [9]]).stop == ((3, 4), (9,))
+    assert SamplingParams(stop=None).stop == ()
+    assert SamplingParams().stop == ()
+    with pytest.raises(ValueError):
+        SamplingParams(max_new_tokens=0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=0)
+    with pytest.raises(ValueError):
+        SamplingParams(stop=[[]])
+    with pytest.raises(ValueError):
+        SamplingParams(n_candidates=-1)
+    # frozen + hashable (rides into jit-cache keys via the Sampler)
+    p = SamplingParams()
+    with pytest.raises(Exception):
+        p.top_k = 2
+    hash(p)
+    assert SamplingParams(temperature=0.0).greedy
+    assert SamplingParams(top_k=4, temperature=0.7).greedy is False
+    # numpy tokens (every prompt in this repo is an np.int32 array)
+    arr = np.asarray([3, 4], np.int32)
+    assert SamplingParams(stop=list(arr)).stop == ((3, 4),)
+    assert SamplingParams(stop=arr).stop == ((3, 4),)
+    assert SamplingParams(stop=np.int32(7)).stop == ((7,),)
+
+
+def test_resolve_consumes_sampling_params():
+    cfg, _ = _mk()
+    assert resolve(SamplingParams(), cfg=cfg) == Greedy("reduced")
+    assert resolve(SamplingParams(), cfg=cfg,
+                   default_head_mode="softmax") == SoftmaxBaseline()
+    # per-request head_mode overrides the engine default
+    assert resolve(SamplingParams(head_mode="softmax"), cfg=cfg,
+                   default_head_mode="reduced") == SoftmaxBaseline()
+    assert resolve(SamplingParams(top_k=4, temperature=0.5),
+                   cfg=cfg) == TopK(4, 0.5, "reduced")
+    # candidate bus: ship max(top_k, n_candidates), sample from top_k
+    s = resolve(SamplingParams(top_k=1, n_candidates=8), cfg=cfg)
+    assert s == TopK(8, 1.0, "reduced", sample_k=1)
+    s = resolve(SamplingParams(top_k=4, temperature=0.9, n_candidates=8),
+                cfg=cfg)
+    assert s == TopK(8, 0.9, "reduced", sample_k=4)
+    with pytest.raises(ValueError):       # no candidate bus on the baseline
+        resolve(SamplingParams(n_candidates=4, head_mode="softmax"),
+                cfg=cfg)
+    with pytest.raises(ValueError):       # beyond MAX_TOP_K, loud
+        resolve(SamplingParams(top_k=500), cfg=cfg)
+
+
+def test_device_form_strips_sample_k_and_temperature():
+    a = TopK(8, 0.7, sample_k=2)
+    b = TopK(8, 1.3, sample_k=8)
+    assert a.device_form() == b.device_form()   # one head group, one compile
+
+
+# ---------------------------------------------------------------------------
+# Stop sequences
+# ---------------------------------------------------------------------------
+def test_stop_sequence_across_step_boundary():
+    cfg, params = _mk()
+    p = _prompts(cfg, 1, seed=11)[0]
+    llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1)
+    probe = llm.generate(p, SamplingParams(max_new_tokens=6))[0]
+    assert len(probe.token_ids) == 6
+    # tokens [2] and [3] are emitted by two DIFFERENT fused decode
+    # steps — the match spans a step boundary (prefix lands one step,
+    # completion the next)
+    stop = probe.token_ids[2:4]
+    out = llm.generate(p, SamplingParams(max_new_tokens=6,
+                                         stop=[stop]))[0]
+    assert out.finish_reason == "stop"
+    assert out.token_ids == probe.token_ids[:4]   # stop tokens included
+    # single-token stop terminates on the first hit
+    out1 = llm.generate(p, SamplingParams(max_new_tokens=6,
+                                          stop=probe.token_ids[0]))[0]
+    assert out1.finish_reason == "stop"
+    assert out1.token_ids == probe.token_ids[:1]
+    # a sequence that never appears does not fire
+    miss = llm.generate(
+        p, SamplingParams(max_new_tokens=6,
+                          stop=[(probe.token_ids[3], probe.token_ids[2],
+                                 probe.token_ids[1])]))[0]
+    assert miss.finish_reason == "length"
+    assert miss.token_ids == probe.token_ids
+
+
+# ---------------------------------------------------------------------------
+# Per-request seed reproducibility under deferral / preemption
+# ---------------------------------------------------------------------------
+def test_seed_reproducible_under_preemption():
+    """The nth emitted token consumes the nth RNG draw whatever the
+    scheduling: an overcommitted pool (deferral + preempt-to-queue +
+    re-prefill) must serve the SAME sampled generations as an ample one
+    when every request pins its own ``seed``."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(3)]
+    plist = [SamplingParams(max_new_tokens=12, top_k=4, temperature=0.8,
+                            seed=100 + i) for i in range(3)]
+
+    def serve(**kw):
+        eng = ServeEngine(params, cfg, n_slots=2, max_len=64, eos_id=-1,
+                          kv_layout="paged", **kw)
+        reqs = [Request(i, p.copy(), params=sp)
+                for i, (p, sp) in enumerate(zip(prompts, plist))]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return reqs, eng
+
+    ample, _ = serve(block_size=8)
+    tight, eng = serve(block_size=8, num_blocks=4)
+    assert eng.stats["preemptions"] >= 1          # scheduling DID differ
+    assert [r.generated for r in tight] == [r.generated for r in ample]
+    # RequestOutput keeps the ORIGINAL prompt even after preemption
+    # folded generated tokens into req.prompt for the re-prefill
+    for r, p in zip(tight, prompts):
+        assert RequestOutput.from_request(r).prompt_token_ids == tuple(p)
+    # same seed, fresh engine -> same tokens (cross-run reproducibility)
+    again, _ = serve(block_size=8)
+    assert [r.generated for r in again] == [r.generated for r in ample]
+
+
+# ---------------------------------------------------------------------------
+# The LLM facade
+# ---------------------------------------------------------------------------
+def test_llm_generate_reduced_equals_softmax():
+    """Theorem 1 at the API level: identical greedy tokens through the
+    reduced comparator and the full softmax unit."""
+    cfg, params = _mk()
+    llm = LLM(params, cfg, n_slots=3, max_len=64, eos_id=1)
+    prompts = _prompts(cfg, 5, seed=3)
+    red = llm.generate(prompts, SamplingParams(max_new_tokens=6,
+                                               head_mode="reduced"))
+    soft = llm.generate(prompts, SamplingParams(max_new_tokens=6,
+                                                head_mode="softmax"))
+    assert [r.token_ids for r in red] == [s.token_ids for s in soft]
+    assert all(r.finish_reason in ("eos", "length") for r in red)
+
+
+def test_llm_generate_order_preserving_and_timing():
+    cfg, params = _mk()
+    llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1)
+    prompts = _prompts(cfg, 5, seed=9)
+    outs = llm.generate(prompts, SamplingParams(max_new_tokens=4))
+    assert [o.rid for o in outs] == sorted(o.rid for o in outs)
+    for o, p in zip(outs, prompts):               # prompt order preserved
+        assert o.prompt_token_ids == tuple(p)
+        assert len(o.token_ids) == 4
+        t = o.timing
+        assert t.queued_ms >= 0 and t.prefill_ms > 0
+        assert t.ttft_ms == pytest.approx(t.queued_ms + t.prefill_ms)
+        assert t.total_ms >= t.ttft_ms and t.tok_s > 0
+    with pytest.raises(ValueError):               # params/prompt mismatch
+        llm.generate(prompts, [SamplingParams()] * 2)
+    # generator input is materialized, not silently exhausted
+    outs2 = llm.generate((p for p in prompts[:2]),
+                         SamplingParams(max_new_tokens=3))
+    assert len(outs2) == 2 and all(len(o.token_ids) == 3 for o in outs2)
+    # a prompt the pool could NEVER cover is rejected at submit (a
+    # long-lived frontend must not let it wedge the engine queue)
+    tiny = LLM(params, cfg, n_slots=2, max_len=48, eos_id=-1,
+               block_size=16, num_blocks=1)
+    with pytest.raises(ValueError, match="never be admitted"):
+        tiny.submit(np.zeros(20, np.int32), SamplingParams())
+    # out-of-range token ids are rejected loudly (XLA gather would
+    # silently clamp them into garbage generations)
+    with pytest.raises(ValueError, match="token ids"):
+        llm.submit([0, cfg.vocab_size], SamplingParams())
+    with pytest.raises(ValueError, match="token ids"):
+        llm.submit([-1, 0], SamplingParams())
+
+
+def test_llm_stream_abandon_cancels_request():
+    """Closing a stream iterator mid-generation (what the SSE server
+    does on client disconnect) cancels the request: the slot's blocks
+    return to the pool and other in-flight requests finish normally."""
+    cfg, params = _mk()
+    llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1)
+    p1, p2 = _prompts(cfg, 2, seed=27)
+    it = llm.stream(p1, SamplingParams(max_new_tokens=30))
+    other = llm.submit(p2, SamplingParams(max_new_tokens=5))
+    first = next(it)
+    assert first.finish_reason is None
+    it.close()                                    # client went away
+    assert llm.stats["cancelled"] == 1
+    llm._drive_until(lambda: other.done)
+    assert len(other.generated) == 5
+    kv = llm.kv_usage()
+    assert kv["blocks_free"] == kv["num_blocks"]  # cancel freed blocks
+
+
+def test_llm_stream_incremental_with_concurrent_request():
+    """The acceptance shape: the stream's first chunk arrives while a
+    SECOND submitted request is still in flight, and the streamed
+    token sequence equals the batch-mode generation."""
+    cfg, params = _mk()
+    llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1)
+    p1, p2 = _prompts(cfg, 2, seed=21)
+    want = llm.generate(p1, SamplingParams(max_new_tokens=6))[0]
+
+    it = llm.stream(p1, SamplingParams(max_new_tokens=6))
+    other = llm.submit(p2, SamplingParams(max_new_tokens=6))
+    first = next(it)
+    assert first.finish_reason is None            # stream is incremental
+    assert not other.done                         # second request in flight
+    assert llm.engine.has_work
+    chunks = [first] + list(it)
+    assert [c.index for c in chunks] == list(range(6))
+    assert chunks[-1].finish_reason == "length"
+    assert all(c.finish_reason is None for c in chunks[:-1])
+    assert tuple(c.token for c in chunks) == want.token_ids
+    # the concurrent request was served by the same pumping, not dropped
+    llm._drive_until(lambda: other.done)
+    assert len(other.generated) == 6
+
+
+def test_llm_stream_candidate_ids_greedy_exact():
+    """n_candidates ships the ranked k-winner bus; sampling stays exact
+    greedy (sample_k=1), so candidates[0] == the emitted token and the
+    whole generation matches the plain comparator."""
+    cfg, params = _mk()
+    llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1)
+    p = _prompts(cfg, 1, seed=33)[0]
+    plain = llm.generate(p, SamplingParams(max_new_tokens=5))[0]
+    chunks = list(llm.stream(p, SamplingParams(max_new_tokens=5,
+                                               n_candidates=4)))
+    assert all(len(c.candidate_ids) == 4 for c in chunks)
+    assert all(c.candidate_ids[0] == c.token for c in chunks)
+    assert tuple(c.token for c in chunks) == plain.token_ids
+
+
+# ---------------------------------------------------------------------------
+# HTTP server
+# ---------------------------------------------------------------------------
+def test_http_server_roundtrip():
+    from repro.serve.server import make_server
+
+    cfg, params = _mk()
+    llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1)
+    srv = make_server(llm, port=0)                # ephemeral port
+    port = srv.server_address[1]
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    base = f"http://127.0.0.1:{port}"
+
+    def post(body):
+        req = urllib.request.Request(
+            f"{base}/v1/completions", data=json.dumps(body).encode(),
+            headers={"Content-Type": "application/json"})
+        return urllib.request.urlopen(req, timeout=300)
+
+    try:
+        prompt = [5, 11, 7, 3, 19, 2]
+        full = json.loads(post({"prompt": prompt,
+                                "max_new_tokens": 5}).read())
+        assert len(full["token_ids"]) == 5
+        assert full["finish_reason"] == "length"
+        assert full["timing"]["tok_s"] > 0
+        raw = post({"prompt": prompt, "max_new_tokens": 5,
+                    "stream": True}).read().decode()
+        lines = [l[6:] for l in raw.splitlines() if l.startswith("data: ")]
+        assert lines[-1] == "[DONE]"
+        chunks = [json.loads(l) for l in lines[:-1]]
+        assert [c["token"] for c in chunks] == full["token_ids"]
+        assert chunks[-1]["finish_reason"] == "length"
+        stats = json.loads(urllib.request.urlopen(
+            f"{base}/v1/stats", timeout=60).read())
+        assert stats["engine"]["decode_steps"] == \
+            stats["engine"]["iterations"]
+        assert stats["kv"]["blocks_free"] == stats["kv"]["num_blocks"]
+        # malformed prompt -> 400, not a hung connection
+        with pytest.raises(urllib.error.HTTPError) as e:
+            post({"prompt": "not token ids"})
+        assert e.value.code == 400
+        # a STREAMED request with bad params must 400 cleanly — the SSE
+        # headers only go out after submit/validation succeeds
+        with pytest.raises(urllib.error.HTTPError) as e:
+            post({"prompt": prompt, "stream": True, "top_k": 500})
+        assert e.value.code == 400
+    finally:
+        srv.shutdown()
+        llm.stop_pump()
+
+
+# ---------------------------------------------------------------------------
+# Deprecated legacy entry points
+# ---------------------------------------------------------------------------
+def test_deprecated_topk_aliases_warn_once():
+    from repro.models import api as model_api
+
+    cfg, params = _mk()
+    batch = {"tokens": np.zeros((1, 4), np.int32)}
+    model_api._warned_topk_aliases.clear()
+    with pytest.warns(DeprecationWarning):
+        (vals, idxs), cache = model_api.serve_topk_prefill(
+            params, cfg, batch, 16, k=4)
+    assert vals.shape == (1, 4) and idxs.shape == (1, 4)
+    # matches the Sampler-protocol path it now delegates to
+    (v2, i2), _ = model_api.serve_prefill(params, cfg, batch, 16,
+                                          TopK(4))
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(i2))
+    with warnings.catch_warnings(record=True) as rec:  # second call: silent
+        warnings.simplefilter("always")
+        model_api.serve_topk_prefill(params, cfg, batch, 16, k=4)
+    assert not [w for w in rec if w.category is DeprecationWarning]
