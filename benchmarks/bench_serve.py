@@ -1,8 +1,11 @@
 """Serving benchmark: the reduced head vs the full-softmax head through
 the continuous-batching engine, across slot counts and a mixed
-prompt-length workload — plus the paged-decode flatness probe and the
+prompt-length workload — plus the paged-decode flatness probe, the
 RAGGED sweep (fused one-step-per-iteration scheduler vs the PR 2
-position-cohort baseline on staggered lengths and mixed samplers).
+position-cohort baseline on staggered lengths and mixed samplers) and
+the SPECULATIVE sweep (comparator-verified prompt-lookup drafts on
+repetitive text: tok/s and acceptance rate vs spec_k, output asserted
+token-identical to non-speculative greedy and the softmax baseline).
 
 For each n_slots the same request trace (mixed short/medium/long prompts)
 is served by:
@@ -237,6 +240,88 @@ def ragged_sweep(arch="qwen3-0.6b", n_requests=12, max_new=10, max_len=96,
                 speedup=fused["tok_s"] / cohort["tok_s"])
 
 
+def spec_sweep(arch="qwen3-0.6b", spec_ks=(0, 2, 4, 8), n_requests=8,
+               max_new=32, n_slots=4, max_len=128, verbose=True):
+    """Speculative decoding A/B on a repetitive-text workload: tok/s and
+    acceptance rate vs ``spec_k``.
+
+    Prompts are repeated n-gram patterns (the shape prompt-lookup
+    drafting exists for: code, structured data, extraction), so the
+    model-free drafter finds real continuations and the comparator
+    verify unit accepts multi-token runs — emitted tokens per iteration
+    rises above 1.  Every sweep point is asserted TOKEN-IDENTICAL to
+    non-speculative greedy AND to the softmax-baseline head (Theorem 1:
+    the verification comparator changes throughput, never output).
+    """
+    from repro.serve.params import SamplingParams
+
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = []
+    for i in range(n_requests):
+        pat = rng.integers(0, cfg.vocab_size, int(rng.integers(3, 6)))
+        reps = int(rng.integers(4, 8))
+        prompts.append(np.tile(pat, reps).astype(np.int32)[:max_len // 2])
+
+    def serve(spec_k, head_mode="reduced"):
+        def once():
+            eng = ServeEngine(params, cfg, n_slots=n_slots,
+                              max_len=max_len, eos_id=1,
+                              kv_layout="paged", head_mode=head_mode)
+            reqs = [Request(i, p.copy(), params=SamplingParams(
+                        max_new_tokens=max_new, spec_k=spec_k))
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            stats = eng.run(max_iters=10000)
+            return (time.perf_counter() - t0, stats,
+                    [r.generated for r in reqs])
+        once()                                  # warmup: compile
+        wall, stats, gens = min((once() for _ in range(3)),
+                                key=lambda r: r[0])
+        toks = sum(len(g) for g in gens)
+        return dict(wall=wall, tok_s=toks / wall, tokens=toks,
+                    iterations=int(stats["iterations"]),
+                    tokens_per_iter=toks / max(stats["iterations"], 1),
+                    drafted=int(stats["drafted"]),
+                    accepted=int(stats["accepted"]),
+                    acceptance_rate=float(stats["acceptance_rate"]),
+                    gens=gens)
+
+    base = serve(0)
+    soft = serve(0, head_mode="softmax")
+    assert base["gens"] == soft["gens"], "reduced != softmax (spec bench)"
+    rows = []
+    for k in spec_ks:
+        r = serve(k) if k else dict(base)
+        assert r["gens"] == base["gens"], \
+            f"speculative (spec_k={k}) != greedy generations"
+        r.pop("gens")
+        r["spec_k"] = k
+        rows.append(r)
+        if verbose:
+            print(f"spec_k={k:2d}  {r['tok_s']:7.1f} tok/s  "
+                  f"{r['tokens_per_iter']:.2f} tok/iter  "
+                  f"acceptance={r['acceptance_rate']:.2f}  "
+                  f"({r['accepted']}/{r['drafted']} drafts)  "
+                  f"iters={r['iterations']}")
+    base.pop("gens")
+    # uplift vs the MEASURED non-speculative baseline (not rows[0],
+    # which need not be spec_k=0 if a custom --spec-ks list was given)
+    best = (max(rows, key=lambda r: r["tok_s"]) if rows
+            else dict(base, spec_k=0))
+    uplift = best["tok_s"] / base["tok_s"]
+    if verbose:
+        print(f"spec uplift on repetitive text: {uplift:.2f}x at "
+              f"spec_k={best['spec_k']} (output token-identical to "
+              f"non-spec greedy and the softmax baseline)")
+    return dict(n_requests=n_requests, n_slots=n_slots, max_new=max_new,
+                baseline_tok_s=base["tok_s"], rows=rows, uplift=uplift,
+                best_spec_k=int(best["spec_k"]))
+
+
 def streaming_latency(arch="qwen3-0.6b", n_requests=8, max_new=12,
                       n_slots=4, max_len=96, verbose=True):
     """Streaming metrics through the LLM facade: per-request TTFT
@@ -297,6 +382,9 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--max-len-sweep", type=int, nargs="+",
                     default=[64, 128, 256, 512])
+    ap.add_argument("--spec-ks", type=int, nargs="+", default=[0, 2, 4, 8],
+                    help="spec_k sweep points for the speculative-decode "
+                         "acceptance/tok-s columns (0 = baseline)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     rows = run(arch=args.arch, slot_counts=tuple(args.slots),
@@ -310,6 +398,9 @@ def main():
           "position-cohort baseline:")
     ragged = ragged_sweep(arch=args.arch, n_requests=args.requests,
                           max_new=args.max_new, max_len=args.max_len)
+    print("\nspeculative decoding (comparator verify, prompt-lookup "
+          "drafts) on repetitive text:")
+    spec = spec_sweep(arch=args.arch, spec_ks=tuple(args.spec_ks))
     print("\nstreaming TTFT / inter-token latency (LLM facade):")
     streaming = streaming_latency(arch=args.arch,
                                   n_requests=args.requests,
@@ -324,7 +415,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump({"arch": args.arch, "backend": jax.default_backend(),
                    "slot_sweep": rows, "ragged_sweep": ragged,
-                   "streaming": streaming,
+                   "spec_sweep": spec, "streaming": streaming,
                    "latency_vs_max_len": sweep},
                   f, indent=2)
     print(f"wrote {args.out}")

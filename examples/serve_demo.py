@@ -16,7 +16,10 @@ Sampler heads in one jitted call — are unchanged underneath):
   - (the paper's point) greedy serving never computes a softmax: the
     same prompts through ``head_mode='reduced'`` and
     ``head_mode='softmax'`` yield token-identical output — Theorem 1 at
-    the API level.
+    the API level;
+  - speculative decoding (``spec_k``): prompt-lookup drafts verified by
+    the same comparator, multiple tokens per fused iteration,
+    bit-identical output.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -113,6 +116,25 @@ def main():
     print(f"reduced vs softmax generations identical: "
           f"{sum(same)}/{n_req} requests")
     assert all(same), "Theorem 1 violated: reduced != softmax tokens"
+
+    # Speculative decoding: prompt-lookup drafts verified by the SAME
+    # comparator (Theorem 1 at K positions) — multiple tokens per fused
+    # iteration, output bit-identical to plain greedy.
+    rep = [np.tile(rng.integers(0, cfg.vocab_size, 4), 5).astype(np.int32)
+           for _ in range(4)]
+    plain = llm.generate(rep, SamplingParams(max_new_tokens=16))
+    it0 = llm.stats["iterations"]
+    spec = llm.generate(rep, SamplingParams(max_new_tokens=16, spec_k=4))
+    s = llm.stats
+    spec_iters = s["iterations"] - it0
+    print(f"\nspeculative decode (spec_k=4, repetitive prompts): "
+          f"{sum(len(o.token_ids) for o in spec)} tokens in "
+          f"{spec_iters} iterations, acceptance "
+          f"{s['acceptance_rate']:.2f} ({s['accepted']}/{s['drafted']} "
+          "drafts), output identical to plain greedy")
+    assert [o.token_ids for o in spec] == [o.token_ids for o in plain]
+    assert s["accepted"] > 0
+    assert sum(len(o.token_ids) for o in spec) > spec_iters
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@
 # streamed and a non-streamed completion, and assert
 #   - stream token-concat == the non-streamed token_ids,
 #   - reduced == softmax greedy output over HTTP (Theorem 1 end-to-end),
+#   - a speculative (spec_k) completion == the plain one over HTTP, with
+#     accepted drafts visible in /v1/stats,
+#   - /healthz answers 200 with ok:true (engine liveness),
+#   - unknown paths 404 with a JSON error body (never empty),
 #   - /v1/stats reports decode_steps == iterations (one fused ragged
 #     decode call per engine iteration survives the network frontend).
 set -euo pipefail
@@ -26,19 +30,33 @@ for _ in $(seq 1 60); do
 done
 curl -sf "$BASE/v1/stats" >/dev/null
 
-BODY='{"prompt": [5, 11, 7, 3, 19, 2], "max_new_tokens": 6}'
+curl -sf "$BASE/healthz" > "$TMP/healthz.json"
+# unknown path: must be a 404 WITH a JSON error body, not an empty reply
+curl -s -o "$TMP/notfound.json" -w '%{http_code}' \
+    "$BASE/no/such/path" > "$TMP/notfound.code"
+
+# a repetitive prompt so the prompt-lookup drafter has something to match
+BODY='{"prompt": [5, 11, 7, 5, 11, 7, 5, 11, 7, 5, 11, 7], "max_new_tokens": 8}'
 curl -sf -X POST "$BASE/v1/completions" -d "$BODY" > "$TMP/full.json"
 curl -sfN -X POST "$BASE/v1/completions" \
     -d "${BODY%\}}, \"stream\": true}" > "$TMP/stream.txt"
 curl -sf -X POST "$BASE/v1/completions" \
     -d "${BODY%\}}, \"head_mode\": \"softmax\"}" > "$TMP/softmax.json"
+curl -sf -X POST "$BASE/v1/completions" \
+    -d "${BODY%\}}, \"spec_k\": 4}" > "$TMP/spec.json"
 curl -sf "$BASE/v1/stats" > "$TMP/stats.json"
 
 TMP="$TMP" python - <<'EOF'
 import json, os
 tmp = os.environ["TMP"]
+health = json.load(open(f"{tmp}/healthz.json"))
+assert health["ok"] is True, health
+nf_code = open(f"{tmp}/notfound.code").read().strip()
+nf = json.load(open(f"{tmp}/notfound.json"))      # JSON body, not empty
+assert nf_code == "404" and "error" in nf, (nf_code, nf)
 full = json.load(open(f"{tmp}/full.json"))
 soft = json.load(open(f"{tmp}/softmax.json"))
+spec = json.load(open(f"{tmp}/spec.json"))
 lines = [l[6:] for l in open(f"{tmp}/stream.txt")
          if l.startswith("data: ")]
 assert lines[-1].strip() == "[DONE]", lines[-1]
@@ -48,9 +66,13 @@ assert streamed == full["token_ids"], (streamed, full["token_ids"])
 assert chunks[-1]["finish_reason"] is not None, chunks[-1]
 assert soft["token_ids"] == full["token_ids"], \
     f"Theorem 1 violated over HTTP: {soft['token_ids']} != {full['token_ids']}"
+assert spec["token_ids"] == full["token_ids"], \
+    f"speculative != plain greedy over HTTP: {spec['token_ids']}"
 stats = json.load(open(f"{tmp}/stats.json"))["engine"]
 assert stats["decode_steps"] == stats["iterations"], stats
+assert stats["accepted"] > 0 and stats["acceptance_rate"] > 0, stats
 print(f"HTTP SMOKE OK: {len(streamed)} streamed tokens == non-streamed, "
-      f"reduced == softmax, decode_steps == iterations "
-      f"({stats['decode_steps']})")
+      f"reduced == softmax == speculative, healthz ok, 404s JSON, "
+      f"decode_steps == iterations ({stats['decode_steps']}), "
+      f"acceptance {stats['acceptance_rate']:.2f}")
 EOF

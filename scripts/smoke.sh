@@ -44,8 +44,50 @@ assert outs["reduced"] == outs["softmax"], "Theorem 1 violated (ragged)"
 print("RAGGED SMOKE OK: one fused step per iteration, reduced == softmax")
 EOF
 
+echo "== speculative-decode smoke (prompt-lookup drafts, comparator-only"
+echo "   verify: spec == non-spec greedy == softmax; emitted > iterations) =="
+timeout 120 python - <<'EOF'
+import jax, numpy as np
+from repro.configs import ARCHS, smoke_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.params import SamplingParams
+
+cfg = smoke_config(ARCHS["qwen3-0.6b"])
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(2)
+# repetitive prompts (prompt-lookup's home turf) + a random one
+prompts = [np.tile(rng.integers(0, cfg.vocab_size, 4), 5).astype(np.int32)
+           for _ in range(3)]
+prompts.append(rng.integers(0, cfg.vocab_size, 11).astype(np.int32))
+
+def serve(spec_k, head_mode="reduced"):
+    eng = ServeEngine(params, cfg, n_slots=4, max_len=96, eos_id=1,
+                      head_mode=head_mode)
+    reqs = [Request(i, p.copy(), params=SamplingParams(
+                max_new_tokens=16, spec_k=spec_k))
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    return [r.generated for r in reqs], stats
+
+base, _ = serve(0)
+soft, _ = serve(0, head_mode="softmax")
+spec, stats = serve(4)
+emitted = sum(len(g) for g in spec)
+assert spec == base, "speculative != non-speculative greedy"
+assert spec == soft, "Theorem 1 violated (speculative vs softmax)"
+assert stats["accepted"] > 0 and stats["acceptance_rate"] > 0, stats
+assert emitted > stats["iterations"], (emitted, stats["iterations"])
+print(f"SPEC SMOKE OK: {emitted} tokens in {stats['iterations']} "
+      f"iterations ({emitted / stats['iterations']:.2f} tok/iter), "
+      f"acceptance {stats['acceptance_rate']:.2f}, outputs identical "
+      "to non-spec greedy and softmax")
+EOF
+
 echo "== HTTP smoke (SSE frontend: streamed == non-streamed, reduced =="
-echo "   softmax over the wire, stats contract) =="
+echo "   softmax over the wire, healthz, stats contract) =="
 timeout 300 bash scripts/http_smoke.sh
 
 echo "SMOKE OK"

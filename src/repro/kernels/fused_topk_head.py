@@ -23,6 +23,13 @@ strictly-greater compare and first-position-wins extraction, so ties
 resolve to the LOWEST global index (running entries hold earlier tiles,
 hence smaller indices), matching ``jnp.argmax``/iterative-selection
 semantics exactly.  Vocab padding is masked to -inf with the static true V.
+
+``fused_verify_head`` is the comparator bank one step further: the
+speculative-decoding VERIFICATION unit.  Greedy verification of K draft
+tokens is the paper's Theorem 1 applied K+1 times — accept draft t_i iff
+argmax(logits_i) == t_i — so the whole check is the fused argmax
+comparator over the (B*T, V) position rows (logits never materialized)
+plus a (B, K) equality/prefix-AND, with zero softmax evaluations.
 """
 from __future__ import annotations
 
@@ -157,3 +164,28 @@ def fused_topk_head(
         interpret=interpret,
     )(h, w)
     return vals[:b_true], idxs[:b_true]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_verify_head(h: jax.Array, w: jax.Array, cand: jax.Array, *,
+                      interpret: bool = False):
+    """Speculative-decoding verify: comparator over K+1 positions per row.
+
+    h: (B, T, D) hidden states (position 0 = the last committed token,
+    1..T-1 = the drafts); w: (D, V); cand: (B, T-1) int32 draft ids,
+    -1-padded past each row's real width.  Returns
+    ``(ids (B, T) i32, accept (B,) i32)`` — see ``ref.verify_draft`` for
+    the exact semantics (this is its Pallas form: the argmax bank runs
+    the fused comparator kernel over the flattened (B*T, D) rows, so the
+    (B*T, V) logits never exist in HBM; the accept prefix-AND is a tiny
+    (B, K) comparison on top).
+    """
+    from repro.kernels.fused_argmax_head import fused_argmax_head
+
+    b, t, d = h.shape
+    assert cand.shape == (b, t - 1), (cand.shape, h.shape)
+    ids = fused_argmax_head(h.reshape(b * t, d), w,
+                            interpret=interpret).reshape(b, t)
+    ok = (ids[:, : t - 1] == cand).astype(jnp.int32)
+    accept = jnp.sum(jnp.cumprod(ok, axis=-1), axis=-1).astype(jnp.int32)
+    return ids, accept

@@ -76,14 +76,34 @@ def fused_topk_head(h, w, k, *, use_pallas: bool = False,
     return ref.fused_topk_head(h, w, k)
 
 
+def verify_draft(h, w, cand, *, use_pallas: bool = False,
+                 interpret: Optional[bool] = None):
+    """Speculative-decoding verification — the comparator-only unit.
+
+    h (B, T, D) hidden states at T consecutive positions; w (D, V);
+    cand (B, T-1) int32 draft ids (-1-padded past a row's real width).
+    Returns (ids (B, T) i32, accept (B,) i32): the per-position greedy
+    argmax via the reduced comparator and the length of the accepted
+    draft prefix — greedy emits exactly ``ids[b, :accept[b]+1]`` this
+    step.  Zero exp / zero sum / zero divide (Theorem 1 at K+1
+    positions); the Pallas path never materializes the logits.
+    """
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
+    if use_pallas:
+        return _ftk.fused_verify_head(h, w, cand, interpret=interpret)
+    return ref.verify_draft(h, w, cand)
+
+
 def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
                     use_pallas: bool = False,
                     interpret: Optional[bool] = None):
     """Ragged decode attention straight off a block-paged KV pool.
 
-    q (B, Hq, hd); pools (num_blocks, block_size, Hkv, hd); block_tables
-    (B, nb) i32; positions (B,) i32 — each row attends over its own
-    kv positions <= positions[b] (a scalar broadcasts) -> (B, Hq, hd).
+    q (B, Hq, hd) — or (B, T, Hq, hd) for a MULTI-TOKEN (speculative)
+    step; pools (num_blocks, block_size, Hkv, hd); block_tables (B, nb)
+    i32; positions (B,) i32 — or (B, T) i32 per-query positions in the
+    multi-token form — each query attends over its own kv positions <=
+    its position (a scalar broadcasts) -> (B, Hq, hd) / (B, T, Hq, hd).
     The Pallas kernel reads pool blocks in place (block table drives the
     index maps; the per-row position is a scalar-prefetch operand); the
     ref path is the dense decode math over the gathered view —

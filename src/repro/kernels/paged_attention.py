@@ -12,22 +12,31 @@ place, and the dense view never exists anywhere.
 
 Decode is RAGGED: every batch row sits at its OWN position (the engine
 fuses all active slots into one step regardless of where each sequence
-is), so ``positions`` is a per-row ``(B,)`` scalar-prefetch vector and
-the valid-key mask is per row: ``kv_pos <= positions[b]``.
+is), so ``positions`` is a per-row scalar-prefetch vector and the
+valid-key mask is per row: ``kv_pos <= positions[b]``.
+
+Decode is also MULTI-TOKEN (speculative): a row may carry ``T = K + 1``
+query tokens — its last committed token plus K draft tokens — each at
+its own position, verified in ONE forward.  ``q`` grows a T axis and
+``positions`` becomes a per-(row, query) ``(B, T)`` matrix; query ``t``
+masks ``kv_pos <= positions[b, t]``, which IS the causal mask inside
+the draft window (draft positions ascend) while padding queries that
+repeat their row's last (token, position) reproduce its output exactly.
 
   grid = (B, nb)                      # nb = max blocks over the batch
-  q     (1, Hq, hd)   indexed (b, 0, 0)
+  q     (1, T, Hq, hd)  indexed (b, 0, 0, 0)
   k/v   (1, bs, Hkv, hd) indexed (btab[b, j], 0, 0, 0)   <- the trick
-  out   (1, Hq, hd)   written at j == nb - 1
+  out   (1, T, Hq, hd)  written at j == nb - 1
 
 Inner loop is the standard online-softmax carry (same (m, l, acc)
-recurrence as kernels/flash_attention.py), GQA-native: scores are
-computed per KV head over its ``g = Hq // Hkv`` query group, no K/V
-repeat.  Positions beyond ``positions[b]`` (the tail of the row's last
-block, whole blocks past a short row's extent, and any padded
-block-table columns) are masked to -inf before they touch the carry, so
-ragged rows and arbitrary pow-2 padded tables are safe — a fully-masked
-block leaves the carry untouched.
+recurrence as kernels/flash_attention.py) over ``T * Hq`` query rows,
+GQA-native: scores are computed per KV head over its ``g = Hq // Hkv``
+query group, no K/V repeat.  Positions beyond a query's own
+``positions[b, t]`` (the tail of the row's last block, whole blocks past
+a short row's extent, and any padded block-table columns) are masked to
+-inf before they touch the carry, so ragged rows and arbitrary pow-2
+padded tables are safe — a fully-masked block leaves the carry
+untouched.
 
 Validated in interpret mode against ``ref.paged_attention`` (which is
 itself the dense decode math applied to the gathered view).
@@ -57,62 +66,76 @@ def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                  # (Hq, hd)
+    q = q_ref[0].astype(jnp.float32)                  # (T, Hq, hd)
     k = k_ref[0].astype(jnp.float32)                  # (bs, Hkv, hd)
     v = v_ref[0].astype(jnp.float32)
-    hq, hd = q.shape
+    tq, hq, hd = q.shape
     hkv = k.shape[1]
 
-    # GQA scores without K repeat: batch the contraction over KV heads.
-    qg = q.reshape(hkv, g, hd)
-    kt = k.transpose(1, 0, 2)                         # (Hkv, bs, hd)
+    # GQA scores without K repeat: batch the contraction over KV heads,
+    # with the T query tokens riding inside each head group.
+    qg = q.reshape(tq, hkv, g, hd).transpose(1, 0, 2, 3)   # (Hkv, T, g, hd)
+    kt = k.transpose(1, 0, 2)                              # (Hkv, bs, hd)
     s = jax.lax.dot_general(
-        qg, kt, (((2,), (2,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32) * scale    # (Hkv, g, bs)
-    s = s.reshape(hq, -1)                              # (Hq, bs)
+        qg.reshape(hkv, tq * g, hd), kt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale        # (Hkv, T*g, bs)
+    s = s.reshape(hkv, tq, g, -1).transpose(1, 0, 2, 3)
+    s = s.reshape(tq * hq, -1)                             # (T*Hq, bs)
 
-    # this row's own position: rows past it (other rows may be longer)
-    # are masked out entirely, so ragged batches share one grid.
+    # each query's own position: kv entries past it (later drafts, other
+    # rows' longer extents, padded table columns) are masked out
+    # entirely, so ragged batches and draft windows share one grid.
+    pos_row = jnp.stack([pos_ref[bi, t] for t in range(tq)])      # (T,)
+    thr = jnp.repeat(pos_row, hq)[:, None]                 # (T*Hq, 1)
     kv_pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = kv_pos <= pos_ref[bi]
+    valid = kv_pos <= thr
     s = jnp.where(valid, s, _NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
-    m_cur = jnp.max(s, axis=-1, keepdims=True)         # (Hq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)         # (T*Hq, 1)
     m_new = jnp.maximum(m_prev, m_cur)
     # rows with no valid key yet keep m = -inf; guard exp(-inf - -inf)
     safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
     p = jnp.exp(jnp.where(valid, s - safe_m, _NEG_INF))
     alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
     l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pg = p.reshape(tq, hkv, g, -1).transpose(1, 0, 2, 3)
     pv = jax.lax.dot_general(
-        p.reshape(hkv, g, -1), v.transpose(1, 0, 2),
+        pg.reshape(hkv, tq * g, -1), v.transpose(1, 0, 2),
         (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)            # (Hkv, g, hd)
-    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(hq, hd)
+        preferred_element_type=jnp.float32)            # (Hkv, T*g, hd)
+    pv = pv.reshape(hkv, tq, g, hd).transpose(1, 0, 2, 3)
+    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(tq * hq, hd)
     m_ref[...] = m_new
 
     @pl.when(j == nb - 1)
     def _emit():
         l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        o_ref[0] = (acc_ref[...] / l).reshape(tq, hq, hd).astype(
+            o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
                     interpret: bool = False):
-    """q: (B, Hq, hd); k/v_pool: (num_blocks, bs, Hkv, hd);
-    block_tables: (B, nb) int32; positions: (B,) int32 — each row
-    attends over its OWN kv positions <= positions[b] (a scalar
-    broadcasts to the whole batch).  -> (B, Hq, hd)."""
-    b, hq, hd = q.shape
+    """q: (B, Hq, hd) — or (B, T, Hq, hd) for a multi-token
+    (speculative) step; k/v_pool: (num_blocks, bs, Hkv, hd);
+    block_tables: (B, nb) int32; positions: (B,) int32 — (B, T) in the
+    multi-token form — each query attends over its OWN kv positions <=
+    its position (a scalar broadcasts to the whole batch).
+    -> (B, Hq, hd) / (B, T, Hq, hd)."""
+    multi = q.ndim == 4
+    if not multi:
+        q = q[:, None]
+    b, t, hq, hd = q.shape
     bs, hkv = k_pool.shape[1], k_pool.shape[2]
     nb = block_tables.shape[1]
     assert hq % hkv == 0, (hq, hkv)
     g = hq // hkv
     scale = 1.0 / math.sqrt(hd)
     positions = jnp.broadcast_to(
-        jnp.asarray(positions, jnp.int32).reshape(-1), (b,))
+        jnp.asarray(positions, jnp.int32).reshape(
+            (-1, t) if jnp.ndim(positions) == 2 else (-1, 1)), (b, t))
 
     kern = functools.partial(_kernel, scale=scale, block_size=bs,
                              nb=nb, g=g)
@@ -120,23 +143,25 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
         num_scalar_prefetch=2,
         grid=(b, nb),
         in_specs=[
-            pl.BlockSpec((1, hq, hd), lambda bi, ji, bt, pp: (bi, 0, 0)),
+            pl.BlockSpec((1, t, hq, hd),
+                         lambda bi, ji, bt, pp: (bi, 0, 0, 0)),
             pl.BlockSpec((1, bs, hkv, hd),
                          lambda bi, ji, bt, pp: (bt[bi, ji], 0, 0, 0)),
             pl.BlockSpec((1, bs, hkv, hd),
                          lambda bi, ji, bt, pp: (bt[bi, ji], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, hq, hd),
-                               lambda bi, ji, bt, pp: (bi, 0, 0)),
+        out_specs=pl.BlockSpec((1, t, hq, hd),
+                               lambda bi, ji, bt, pp: (bi, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((hq, 1), jnp.float32),
-            pltpu.VMEM((hq, 1), jnp.float32),
-            pltpu.VMEM((hq, hd), jnp.float32),
+            pltpu.VMEM((t * hq, 1), jnp.float32),
+            pltpu.VMEM((t * hq, 1), jnp.float32),
+            pltpu.VMEM((t * hq, hd), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, t, hq, hd), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), positions, q, k_pool, v_pool)
+    return out if multi else out[:, 0]

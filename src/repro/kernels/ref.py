@@ -57,6 +57,37 @@ def fused_topk_head(h: jax.Array, w: jax.Array, k: int):
     return topk_select(logits, k)
 
 
+def verify_draft(h: jax.Array, w: jax.Array, cand: jax.Array):
+    """Comparator-only speculative-decoding verification.
+
+    h: (B, T, D) final hidden states at T consecutive positions — index 0
+    is the row's last committed token, indices 1..T-1 its K = T-1 draft
+    tokens; w: (D, V) LM head; cand: (B, K) int32 draft token ids, padded
+    with -1 past each row's real draft width.
+
+    Returns ``(ids (B, T) i32, accept (B,) i32)``:
+
+      ids[b, t]   = argmax_v(h[b, t] @ w) — the greedy token after
+                    position t, via the reduced comparator (Theorem 1:
+                    bit-identical to softmax + argmax, zero exp/sum/div);
+      accept[b]   = length of the leading run where ids[b, i] ==
+                    cand[b, i] — how many drafts greedy decoding would
+                    itself have emitted.  The -1 padding can never equal
+                    an argmax id, so ragged draft widths stop their run
+                    automatically.
+
+    The tokens a greedy decoder emits this step are exactly
+    ``ids[b, :accept[b] + 1]`` (the accepted drafts are ids[:accept]
+    verbatim, plus the comparator's correction/bonus token at the first
+    divergence) — the whole check is max-comparisons, no softmax.
+    """
+    b, t, d = h.shape
+    ids = fused_argmax_head(h.reshape(b * t, d), w).reshape(b, t)
+    ok = (ids[:, : t - 1] == cand).astype(jnp.int32)
+    accept = jnp.sum(jnp.cumprod(ok, axis=-1), axis=-1).astype(jnp.int32)
+    return ids, accept
+
+
 # ---------------------------------------------------------------------------
 # online_softmax: the full softmax unit (numerically-stable), unit-level
 # ---------------------------------------------------------------------------
@@ -94,48 +125,58 @@ def fused_xent(logits: jax.Array, labels: jax.Array):
 def paged_attention(q, k_pool, v_pool, block_tables, positions):
     """Ragged decode-step attention reading K/V through a block table.
 
-    q: (B, Hq, hd) per-row query for the token at ``positions[b]``;
+    q: (B, Hq, hd) per-row query for the token at ``positions[b]`` — or
+    (B, T, Hq, hd) for a MULTI-TOKEN (speculative) step, where query
+    ``t`` of row ``b`` sits at ``positions[b, t]``;
     k_pool, v_pool: (num_blocks, block_size, Hkv, hd) SHARED pools;
     block_tables: (B, nb) int32 — row b's view position ``j`` lives in
     ``pool[block_tables[b, j // bs], j % bs]``;
-    positions: (B,) int32 — row b attends over kv positions <=
-    ``positions[b]`` (a scalar broadcasts to the whole batch), so every
-    row can sit at its own sequence length inside one call.
+    positions: (B,) int32 ((B, T) in the multi-token form) — each query
+    attends over kv positions <= its own position (a scalar broadcasts
+    to the whole batch), so every row can sit at its own sequence length
+    inside one call, and in a speculative step every draft position
+    masks exactly its causal history.
 
-    Returns (B, Hq, hd) in q.dtype.  The math is EXACTLY the dense decode
-    attention of ``models.layers.attention`` applied to the gathered
-    block view (same einsums, same f32 mask/softmax, masked scores at
-    -1e30 so exp underflows to exactly 0.0): paged and dense decode agree
-    token-exactly, which tests assert at engine level.  This oracle is
-    the XLA fallback; the Pallas kernel reads the pool blocks in place.
+    Returns (B, Hq, hd) / (B, T, Hq, hd) in q.dtype.  The math is
+    EXACTLY the dense decode attention of ``models.layers.attention``
+    applied to the gathered block view (same einsums, same f32
+    mask/softmax, masked scores at -1e30 so exp underflows to exactly
+    0.0): paged and dense decode agree token-exactly, which tests assert
+    at engine level.  This oracle is the XLA fallback; the Pallas kernel
+    reads the pool blocks in place.
     """
-    b, hq, hd = q.shape
+    multi = q.ndim == 4
+    if not multi:
+        q = q[:, None]                                     # (B, 1, Hq, hd)
+    b, t, hq, hd = q.shape
     bs, hkv = k_pool.shape[1], k_pool.shape[2]
     dt = q.dtype
     pos = jnp.broadcast_to(
-        jnp.asarray(positions, jnp.int32).reshape(-1), (b,))
+        jnp.asarray(positions, jnp.int32).reshape(
+            (-1, t) if jnp.ndim(positions) == 2 else (-1, 1)), (b, t))
     k = jnp.take(k_pool, block_tables, axis=0).astype(dt)  # (B, nb, bs, ...)
     v = jnp.take(v_pool, block_tables, axis=0).astype(dt)
     k = k.reshape(b, -1, hkv, hd)
     v = v.reshape(b, -1, hkv, hd)
     kv_pos = jnp.arange(k.shape[1])
-    mask = kv_pos[None, :] <= pos[:, None]                 # (B, S) per-row
+    mask = kv_pos[None, None, :] <= pos[:, :, None]        # (B, T, S)
     g = hq // hkv
-    qt = q[:, None]                                        # (B, 1, Hq, hd)
     if g > 1:
         # grouped-query form, mirroring the dense decode branch
-        qg = qt.reshape(b, 1, hkv, g, hd)
+        qg = q.reshape(b, t, hkv, g, hd)
         scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) / (hd ** 0.5)
         scores = scores.astype(jnp.float32)
-        scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1).astype(dt)
-        out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
-        return out.reshape(b, hq, hd)
-    scores = jnp.einsum("bthd,bshd->bhts", qt, k) / (hd ** 0.5)
+        out = jnp.einsum("bkgts,bskh->btkgh", probs, v).reshape(
+            b, t, hq, hd)
+        return out if multi else out[:, 0]
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / (hd ** 0.5)
     scores = scores.astype(jnp.float32)
-    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    scores = jnp.where(mask[:, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(dt)
-    return jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, hq, hd)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out if multi else out[:, 0]
 
 
 # ---------------------------------------------------------------------------

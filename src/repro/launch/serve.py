@@ -4,7 +4,7 @@
       --requests 8 --slots 4 \
       [--head-mode reduced|softmax|fused|sharded|temperature] \
       [--kv-layout paged|dense] [--top-k 4 --temperature 0.8] \
-      [--serve-http 8000]
+      [--spec-k 4] [--serve-http 8000]
 
 ``--serve-http PORT`` swaps the batch run for the network frontend
 (serve/server.py): an SSE ``POST /v1/completions`` + ``GET /v1/stats``
@@ -57,6 +57,12 @@ def main():
     ap.add_argument("--top-k", type=int, default=1,
                     help=">1: top-k sampling via the k-winner comparator")
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help=">0: speculative decoding — up to K prompt-"
+                         "lookup draft tokens per step, verified by the "
+                         "reduced comparator in one forward (greedy "
+                         "only; bit-identical output, 1..K+1 tokens per "
+                         "iteration)")
     ap.add_argument("--scheduler", default="fused",
                     choices=["fused", "cohort"],
                     help="fused: ONE jitted ragged decode step per "
@@ -101,17 +107,32 @@ def main():
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, 24))
-        eng.submit(Request(
-            rid, rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=args.max_new, sampler=sampler))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        if args.spec_k:
+            from repro.serve.params import SamplingParams
+
+            # pass every sampling knob through so invalid combinations
+            # (spec_k with --top-k > 1, a non-comparator --head-mode)
+            # fail loudly in SamplingParams/submit instead of silently
+            # serving greedy
+            eng.submit(Request(rid, prompt, params=SamplingParams(
+                max_new_tokens=args.max_new, spec_k=args.spec_k,
+                top_k=args.top_k, temperature=args.temperature,
+                head_mode=args.head_mode)))
+        else:
+            eng.submit(Request(rid, prompt, max_new_tokens=args.max_new,
+                               sampler=sampler))
     t0 = time.perf_counter()
     stats = eng.run()
     dt = time.perf_counter() - t0
+    spec = (f"drafted={stats['drafted']} accepted={stats['accepted']} "
+            f"acceptance={stats['acceptance_rate']:.2f} "
+            if args.spec_k else "")
     print(f"sampler={sampler} kv={args.kv_layout} sched={args.scheduler} "
           f"served={stats['completed']} decode_steps={stats['decode_steps']} "
           f"iterations={stats['iterations']} "
           f"rows/step={stats['fused_rows'] / max(stats['decode_steps'], 1):.2f} "
-          f"preempt={stats['preemptions']} wall={dt:.2f}s")
+          f"preempt={stats['preemptions']} {spec}wall={dt:.2f}s")
 
 
 if __name__ == "__main__":

@@ -97,15 +97,21 @@ def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
                  block_tables: Optional[jax.Array] = None):
     """One token step: returns (head output (B, ...), new_cache).
 
-    ``pos`` is a scalar or a per-row ``(B,)`` vector — ragged decode:
-    every batch row at its own position in one call.  With
+    ``pos`` is a scalar, a per-row ``(B,)`` vector — ragged decode:
+    every batch row at its own position in one call — or a per-(row,
+    query) ``(B, T)`` matrix when ``token`` is a (B, T) speculative
+    draft window (the head then applies to the NEXT-token hidden state,
+    position 0; use ``kernels.ops.verify_draft`` on
+    ``lm.decode_step``'s full (B, T, D) output to verify drafts).  With
     ``block_tables`` the cache's linear K/V leaves are block-paged
-    pools: the step scatters the new row into its pool block and
+    pools: the step scatters the new row(s) into their pool blocks and
     attention reads the pool through the table — no dense gather.
     """
     s = _as_sampler(head_mode, cfg)
     h, new_cache = lm.decode_step(params, cfg, token, cache, pos,
                                   block_tables=block_tables)
+    if h.ndim == 3:                  # multi-token window: next-token head
+        h = h[:, 0]
     return s.head(params, cfg, h), new_cache
 
 
@@ -143,48 +149,6 @@ def serve_prefill_paged(params, cfg: ModelConfig, batch: dict,
             new_pools.append(None)
             dense_leaves.append(leaf)
     return s.head(params, cfg, h), new_pools, dense_leaves
-
-
-def _warn_topk_alias(name: str) -> None:
-    """One DeprecationWarning per process per alias — the pre-Sampler
-    entry points survive only as shims over the Sampler-protocol path."""
-    if name not in _warned_topk_aliases:
-        _warned_topk_aliases.add(name)
-        import warnings
-
-        warnings.warn(
-            f"{name}() is deprecated: pass TopK(k, head_mode=...) (or a "
-            "SamplingParams with top_k=k) to serve_prefill/serve_decode "
-            "instead", DeprecationWarning, stacklevel=3)
-
-
-_warned_topk_aliases: set = set()
-
-
-def serve_topk_prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
-                       k: int, head_mode="reduced"):
-    """Deprecated alias for ``serve_prefill(..., TopK(k, head_mode=...))``:
-    ((vals (B,k), idxs (B,k)), cache).  k=1 is honored (a (B, 1)
-    comparator bus), matching the legacy contract this shim preserves.
-    """
-    from repro.serve.sampler import TopK
-
-    _warn_topk_alias("serve_topk_prefill")
-    return serve_prefill(params, cfg, batch, max_len,
-                         TopK(k, head_mode=head_mode))
-
-
-def serve_topk_decode(params, cfg: ModelConfig, token: jax.Array, cache,
-                      pos: jax.Array, k: int, head_mode="reduced", *,
-                      block_tables: Optional[jax.Array] = None):
-    """Deprecated alias for ``serve_decode(..., TopK(k, head_mode=...))``:
-    ((vals, idxs), new_cache)."""
-    from repro.serve.sampler import TopK
-
-    _warn_topk_alias("serve_topk_decode")
-    return serve_decode(params, cfg, token, cache, pos,
-                        TopK(k, head_mode=head_mode),
-                        block_tables=block_tables)
 
 
 # ---------------------------------------------------------------------------

@@ -155,8 +155,9 @@ def attention(
     window: Optional[int] = None,
     cache: Optional[dict] = None,       # {'k','v'}: (B, S_cache, Hkv, hd)
     cache_pos: Optional[jax.Array] = None,  # int32 write index base:
-                                            # scalar, or (B,) per-row
-                                            # (ragged decode; T must be 1)
+                                            # scalar, (B,) per-row (ragged
+                                            # decode), or (B, T) per-token
+                                            # (speculative multi-token)
     block_tables: Optional[jax.Array] = None,  # (B, nb) i32: paged decode
     return_kv: bool = False,
     use_flash: bool = False,            # Pallas flash kernel (fwd-only paths)
@@ -181,6 +182,17 @@ def attention(
     history — the serving engine fuses slots at arbitrary positions into
     one step this way.  A scalar keeps the seed single-position semantics
     byte-for-byte (and supports T > 1 in the linear branch).
+
+    ``cache_pos`` may also be a ``(B, T)`` matrix — MULTI-TOKEN ragged
+    decode, the speculative-decoding step: row ``b``'s query ``t`` (its
+    last committed token at t = 0, drafts after) writes its K/V at
+    ``cache_pos[b, t]`` and masks ``kv_pos <= cache_pos[b, t]``, so one
+    forward verifies a whole draft window per row.  Rows narrower than T
+    repeat their last real (token, position) pair: the duplicate query
+    recomputes the identical K/V row into the identical cache cell, so
+    padding is a no-op.  Supported by the paged and linear branches
+    (sliding-window ring buffers and recurrent state cannot rewind a
+    rejected draft, so speculation never reaches them).
     """
     dt = x.dtype
     B, T, _ = x.shape
@@ -221,28 +233,40 @@ def attention(
         # decode_shard_constraints pins for the per-slot dense cache do
         # not apply here.
         bs = cache["k"].shape[1]
-        # per-row positions: scatter each row's K/V at its own (block,
-        # offset) and attend over its own history — one call serves a
-        # ragged batch.  A scalar cache_pos broadcasts (uniform batch).
-        cpv = jnp.broadcast_to(
-            jnp.asarray(cache_pos, jnp.int32).reshape(-1), (B,))
-        blk = jnp.take_along_axis(
-            block_tables, (cpv // bs)[:, None], axis=1)[:, 0]       # (B,)
-        off = cpv % bs
-        ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+        # per-row (and, multi-token, per-query) positions: scatter each
+        # new K/V row at its own (block, offset) and attend over its own
+        # history — one call serves a ragged batch and a draft window.
+        # A scalar cache_pos broadcasts (uniform batch); (B,) bases a
+        # consecutive window; (B, T) is explicit per-query.
+        cp = jnp.asarray(cache_pos, jnp.int32)
+        if cp.ndim == 2:
+            cpm = cp                                            # (B, T)
+        elif cp.ndim == 1:
+            cpm = cp[:, None] + jnp.arange(T)
+        else:
+            cpm = (cp + jnp.arange(T))[None]
+        cpm = jnp.broadcast_to(cpm, (B, T))
+        blk = jnp.take_along_axis(block_tables, cpm // bs, axis=1)  # (B, T)
+        off = cpm % bs
+        ck = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
         from repro.kernels import ops as kernel_ops
 
-        o = kernel_ops.paged_attention(
-            q[:, 0], ck, cv, block_tables, cpv,
-            use_pallas=cfg.use_pallas)
-        out = o.reshape(B, 1, hq * hd).astype(dt)
+        if T == 1:
+            o = kernel_ops.paged_attention(
+                q[:, 0], ck, cv, block_tables, cpm[:, 0],
+                use_pallas=cfg.use_pallas)
+        else:
+            o = kernel_ops.paged_attention(
+                q, ck, cv, block_tables, cpm, use_pallas=cfg.use_pallas)
+        out = o.reshape(B, T, hq * hd).astype(dt)
         return out @ p["wo"].astype(dt), {"k": ck, "v": cv}
 
     extra = None
     if cache is not None and cache_pos is not None:
         s_cache = cache["k"].shape[1]
         ragged = jnp.ndim(cache_pos) == 1       # per-row positions (T == 1)
+        raggedT = jnp.ndim(cache_pos) == 2      # per-(row, query) positions
         bidx = jnp.arange(B)
         if window is not None and s_cache == window:
             # ring buffer: slot = pos % window (T must be 1)
@@ -267,7 +291,22 @@ def attention(
                 valid = kv_pos >= 0
                 mask = valid[None, None, None, :]
         else:
-            if ragged:
+            if raggedT:
+                # multi-token ragged (speculative): each (row, query)
+                # writes at its own position and masks its own history;
+                # repeated (token, position) padding pairs rewrite the
+                # same cell with the same value.
+                ck = cache["k"].at[bidx[:, None], cache_pos].set(
+                    k.astype(cache["k"].dtype))
+                cv = cache["v"].at[bidx[:, None], cache_pos].set(
+                    v.astype(cache["v"].dtype))
+                kv_pos = jnp.arange(s_cache)
+                m = kv_pos[None, None, :] <= cache_pos[:, :, None]  # (B,T,S)
+                if window is not None:
+                    m &= kv_pos[None, None, :] > (cache_pos[:, :, None]
+                                                  - window)
+                mask = m[:, None]                             # (B, 1, T, S)
+            elif ragged:
                 ck = cache["k"].at[bidx, cache_pos].set(
                     k[:, 0].astype(cache["k"].dtype))
                 cv = cache["v"].at[bidx, cache_pos].set(

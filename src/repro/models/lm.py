@@ -342,18 +342,30 @@ def _layer_cache(cfg: ModelConfig, kind: str, B: int, max_len: int):
 
 def _run_stack_decode(stack_params, segs, x, caches, cfg: ModelConfig, *,
                       pos, block_tables=None):
-    """One decode step. x: (B, 1, D). Returns (x, new_caches).
+    """One decode step. x: (B, T, D) (T = 1 for plain decode, T = K + 1
+    for a speculative draft window). Returns (x, new_caches).
 
-    ``pos`` is a scalar (uniform batch) or a per-row ``(B,)`` vector —
+    ``pos`` is a scalar (uniform batch), a per-row ``(B,)`` vector —
     RAGGED decode: each row writes its cache and rotates its query at
     its own position, so one step serves slots at arbitrary sequence
-    lengths.  With ``block_tables``, linear K/V cache entries are
-    block-paged pools shared across the batch (see serve/paged_kv.py);
-    attention reads them through the table instead of a per-slot dense
-    view.
+    lengths — or a per-(row, query) ``(B, T)`` matrix for the
+    speculative multi-token step (each draft token at its own position;
+    padding queries repeat their row's last real position).  With
+    ``block_tables``, linear K/V cache entries are block-paged pools
+    shared across the batch (see serve/paged_kv.py); attention reads
+    them through the table instead of a per-slot dense view.
     """
-    positions = (jnp.reshape(pos, (1,)) if jnp.ndim(pos) == 0
-                 else pos[:, None])                  # (B, 1): per-row RoPE
+    T = x.shape[1]
+    if jnp.ndim(pos) == 2:
+        positions = pos                              # (B, T) explicit
+    elif jnp.ndim(pos) == 1:
+        positions = (pos[:, None] + jnp.arange(T) if T > 1
+                     else pos[:, None])              # (B, T): per-row RoPE
+        if T > 1:
+            pos = positions                          # per-query cache writes
+    else:
+        positions = jnp.reshape(pos, (1,)) + jnp.arange(T) if T > 1 \
+            else jnp.reshape(pos, (1,))
     new_caches = []
     for seg_params, seg_cache, (unit, count) in zip(stack_params, caches,
                                                     segs):
@@ -510,10 +522,15 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
                 pos: jax.Array, *, block_tables=None):
-    """One decode step. token: (B, 1) int32; pos: int32 position of
-    ``token`` — a scalar, or a per-row ``(B,)`` vector for RAGGED decode
+    """One decode step. token: (B, T) int32 (T = 1 for plain decode,
+    T = K + 1 for a speculative draft window: the row's last committed
+    token followed by its K drafts); pos: int32 position(s) of
+    ``token`` — a scalar, a per-row ``(B,)`` vector for RAGGED decode
     (every row at its own position; the serving engine fuses all active
-    slots into one such call).  Returns (last_hidden (B, D), new_caches).
+    slots into one such call), or a per-(row, query) ``(B, T)`` matrix
+    for the speculative step.  Returns (last_hidden, new_caches) where
+    last_hidden is (B, D) for T == 1 (unchanged contract) and (B, T, D)
+    for a multi-token step (one verification point per position).
 
     ``block_tables`` (B, nb) int32 switches linear-attention cache
     leaves to the block-paged pool layout: the step scatters each new
@@ -525,5 +542,8 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
     x, new_caches = _run_stack_decode(
         params["decoder"], segments(cfg), x, caches, cfg, pos=pos,
         block_tables=block_tables)
-    h = final_hidden(params, cfg, x[:, 0, :])
+    if token.shape[1] == 1:
+        h = final_hidden(params, cfg, x[:, 0, :])
+    else:
+        h = final_hidden(params, cfg, x)
     return h, new_caches

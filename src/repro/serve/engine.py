@@ -33,7 +33,20 @@ The inference-accelerator story of the paper, at engine level:
     with the (B, V) logits never materialized; no exp, no normalizing
     sum, no divide — Theorem 1), ``TopK`` the k-winner comparator with
     an O(k) host softmax, ``Temperature`` Gumbel-max over the logit row,
-    ``SoftmaxBaseline`` the full unit for A/B runs.
+    ``SoftmaxBaseline`` the full unit for A/B runs;
+  - decode is SPECULATIVE on request (``SamplingParams(spec_k=K)``):
+    the engine's Drafter (serve/spec.py; default model-free
+    prompt-lookup) proposes up to K draft tokens per slot, the fused
+    step runs the trunk over each row's (last token + drafts) window at
+    per-(row, query) positions, and the COMPARATOR verifies all K
+    positions at once (accept draft t_i iff argmax(logits_i) == t_i —
+    Theorem 1, repeated; ``kernels.ops.verify_draft``), emitting
+    1..K+1 tokens per iteration, bit-identical to non-speculative
+    greedy.  Rejected drafts rewind O(1): the slot position simply
+    doesn't advance over them (the kv_pos <= positions masks make the
+    stale pool rows invisible) and whole surplus blocks return to the
+    free list (``store.rewind``).  Non-speculating rows ride along at
+    width 1 in the same jitted call.
 
 ``scheduler='cohort'`` keeps the PR 2 position-cohort scheduling (one
 fused call per (position, head) group) as the measurable baseline the
@@ -101,9 +114,10 @@ def _jitted_prefill_paged(cfg: ModelConfig, sampler: Sampler,
 
 @functools.lru_cache(maxsize=None)
 def _jitted_step(cfg: ModelConfig, samplers: tuple, treedef,
-                 paged_mask: tuple, mesh):
+                 paged_mask: tuple, mesh, spec_pallas=None):
     """THE fused ragged decode step: one jitted call per engine
-    iteration, whatever mix of positions and samplers is active.
+    iteration, whatever mix of positions, samplers — and draft widths —
+    is active.
 
     The trunk (``lm.decode_step``) runs ONCE over all rows with per-row
     ``positions``; paged leaves enter AS the shared pools (plus the
@@ -113,16 +127,37 @@ def _jitted_step(cfg: ModelConfig, samplers: tuple, treedef,
     the shared hidden state and applies its head, all inside the same
     call.  ``rows`` (per-group row-index vectors, pow-2 padded) are
     traced operands, so WHICH rows belong to which head never retraces.
+
+    ``spec_pallas is not None`` marks a SPECULATIVE step: ``toks`` is
+    (B, T) with T = 1 + max draft width, ``positions`` a (B, T) matrix,
+    and the speculating rows form one extra group verified by the
+    comparator bank (``ops.verify_draft`` over their (Bs, T, D) hidden
+    states against ``spec_cand``, -1-padded draft ids) — the group's
+    output is ``(ids (Bs, T), accept (Bs,))``, appended after the
+    sampler groups.  Non-speculating rows ride along at width 1 (their
+    padding queries repeat their last (token, position), a cache no-op)
+    and their heads read position 0 of the shared hidden state.
     """
 
-    def step(params, toks, pools, denses, btab, positions, rows):
+    def step(params, toks, pools, denses, btab, positions, rows,
+             spec_rows=None, spec_cand=None):
         leaves = [pool if m else dense
                   for m, pool, dense in zip(paged_mask, pools, denses)]
         cache = jax.tree.unflatten(treedef, leaves)
         h, new_cache = lm.decode_step(params, cfg, toks, cache, positions,
                                       block_tables=btab)
-        outs = tuple(s.head(params, cfg, h[r])
-                     for s, r in zip(samplers, rows))
+        if spec_pallas is not None:
+            from repro.kernels import ops as kernel_ops
+
+            h0 = h[:, 0]                      # (B, D): next-token hidden
+            outs = tuple(s.head(params, cfg, h0[r])
+                         for s, r in zip(samplers, rows))
+            w = sampler_mod._head_weight(params, cfg)
+            outs = outs + (kernel_ops.verify_draft(
+                h[spec_rows], w, spec_cand, use_pallas=spec_pallas),)
+        else:
+            outs = tuple(s.head(params, cfg, h[r])
+                         for s, r in zip(samplers, rows))
         new_pools, new_denses = [], []
         for m, leaf in zip(paged_mask, jax.tree.flatten(new_cache)[0]):
             new_pools.append(leaf if m else None)
@@ -187,7 +222,8 @@ class ServeEngine:
                  head_mode: str = "reduced", kv_layout: str = "paged",
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_per_step: Optional[int] = None,
-                 scheduler: str = "fused", mesh=None, seed: int = 0):
+                 scheduler: str = "fused", mesh=None, seed: int = 0,
+                 drafter=None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -212,6 +248,22 @@ class ServeEngine:
                 "(or None for unlimited); 0 would serve nothing forever")
         self.prefill_per_step = prefill_per_step
         self.seed = seed
+        # the draft proposer for speculative requests (spec_k > 0);
+        # model-free prompt-lookup by default — any serve.spec.Drafter.
+        from repro.serve.spec import PromptLookupDrafter
+
+        self.drafter = drafter if drafter is not None \
+            else PromptLookupDrafter()
+        # speculation rewrites per-token cache state by position masks,
+        # which only linear-attention KV supports: ring buffers lose
+        # history on overwrite and recurrent state cannot rewind a
+        # rejected draft.  MoE is excluded too — its capacity-dropping
+        # expert routing makes a token's decode logits depend on what
+        # ELSE shares the batch (draft tokens shift capacity ranks), so
+        # comparator verification cannot be bit-exact against the
+        # width-1 step.
+        self.spec_capable = (cfg.attention_window is None and all(
+            k == "attn" for k in lm.layer_types(cfg)))
         self.store = PagedKVStore(
             params, cfg, n_slots=n_slots, max_len=max_len,
             block_size=block_size, num_blocks=num_blocks, layout=kv_layout)
@@ -220,9 +272,13 @@ class ServeEngine:
         # decode_steps == iterations (one call whatever the position /
         # sampler mix); fused_rows counts real (non-padding) slot rows
         # served across those calls, so benches can report rows-per-step.
+        # drafted/accepted count speculative draft tokens proposed /
+        # verified-accepted by the comparator; acceptance_rate is their
+        # running ratio (the spec-decode health metric).
         self.stats = {"prefills": 0, "decode_steps": 0, "iterations": 0,
                       "fused_rows": 0, "completed": 0, "deferred": 0,
-                      "preemptions": 0, "cancelled": 0}
+                      "preemptions": 0, "cancelled": 0,
+                      "drafted": 0, "accepted": 0, "acceptance_rate": 0.0}
         # per-token event consumers: every emitted token — prefill head
         # or fused decode step — is delivered as a TokenChunk, with
         # finish_reason set on a request's final chunk.  The LLM facade
@@ -262,6 +318,31 @@ class ServeEngine:
             req.sampler.validate(self.cfg)
         if req.sampler.needs_mesh and self.mesh is None:
             raise ValueError(f"{req.sampler} requires an engine mesh=")
+        if req.params.spec_k > 0:
+            # params validated the sampling law; the ENGINE must also be
+            # able to verify: comparator head, rewindable cache state,
+            # and the fused scheduler (the cohort baseline predates the
+            # multi-token step).
+            if not (isinstance(req.sampler, sampler_mod.Greedy)
+                    and req.sampler.head_mode in ("reduced", "fused")):
+                raise ValueError(
+                    f"spec_k={req.params.spec_k} requires the reduced "
+                    f"comparator head (engine head_mode="
+                    f"{self.head_mode!r} resolved to {req.sampler})")
+            if not self.spec_capable:
+                raise ValueError(
+                    f"spec_k={req.params.spec_k}: speculative decoding "
+                    "needs pure linear-attention decode (no sliding "
+                    "window or recurrent state — rejected drafts cannot "
+                    "be rewound; no capacity-dropping MoE routing — "
+                    "draft tokens would shift expert capacity and break "
+                    f"bit-exactness); the {self.cfg.family!r} config "
+                    "does not qualify")
+            if self.scheduler != "fused":
+                raise ValueError(
+                    f"spec_k={req.params.spec_k} requires "
+                    "scheduler='fused' (the cohort baseline has no "
+                    "multi-token step)")
         if len(req.prompt) > self.max_len - 1:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds max_len-1="
@@ -370,9 +451,13 @@ class ServeEngine:
                 continue
             req = self.slots[i]
             # fold emitted tokens into the prompt; ``generated`` keeps the
-            # full emission history (re-prefill continues exactly after it)
+            # full emission history (re-prefill continues exactly after
+            # it).  Fold from ORIG_PROMPT, not req.prompt: after a second
+            # preemption req.prompt already contains the first fold's
+            # tokens and concatenating generated again would duplicate
+            # them — a silently corrupted re-prefill context.
             req.prompt = np.concatenate(
-                [np.asarray(req.prompt, np.int32),
+                [np.asarray(req.orig_prompt, np.int32),
                  np.asarray(req.generated, np.int32)])
             self._release_slot(i)
             self.queue.appendleft(req)
@@ -421,9 +506,40 @@ class ServeEngine:
             self._decode_rows(active)
         return True
 
+    def _propose(self, i: int) -> list:
+        """Draft tokens for slot ``i`` this step (possibly none): ask the
+        Drafter for up to the request's remaining speculation budget,
+        then shrink the window to what the cache ceiling and the free
+        block pool can actually hold — speculation never preempts a
+        neighbour, it just drafts less."""
+        req = self.slots[i]
+        k = req.params.spec_k
+        if k <= 0 or self.scheduler != "fused":
+            return []
+        pos = int(self.slot_pos[i])
+        # a draft window writes K/V at pos..pos+k and can emit up to
+        # k+1 tokens: clamp to the remaining token budget and to the
+        # max_len-1 cache ceiling.
+        k = min(k, req.max_new_tokens - len(req.generated) - 1,
+                self.max_len - 1 - pos)
+        if k < 1:
+            return []
+        history = [int(t) for t in req.orig_prompt] \
+            + [int(t) for t in req.generated]
+        drafts = []
+        for t in self.drafter.propose(history, k)[:k]:
+            if not 0 <= int(t) < self.cfg.vocab_size:
+                break             # a bad drafter id can never be accepted
+            drafts.append(int(t))
+        while drafts and not self.store.can_grow(i, pos + len(drafts)):
+            drafts.pop()
+        if drafts and not self.store.ensure_capacity(i, pos + len(drafts)):
+            return []             # lost a race with another slot's growth
+        return drafts
+
     def _decode_rows(self, rows: List[int]):
         """One fused jitted decode call over the given slot rows — ragged
-        positions, mixed samplers.
+        positions, mixed samplers, per-row draft widths.
 
         Batch and block-view sizes are bucketed to powers of two so
         decode compiles O(log n_slots * log max_blocks) shapes, not one
@@ -434,34 +550,83 @@ class ServeEngine:
         discards them.  Head groups (one per distinct ``device_form()``)
         partition the padded rows; their pow-2-padded row-index vectors
         are traced operands of the ONE jitted call.
+
+        Rows with draft tokens this step (``_propose``) widen the call
+        to T = pow2(1 + max draft width): each such row carries its last
+        token plus its drafts at consecutive positions and joins the
+        COMPARATOR-VERIFY group (``ops.verify_draft`` inside the same
+        jitted call); every other row rides along at width 1, padding
+        queries repeating its last (token, position) — a cache no-op.
+        The verified rows then emit their whole accepted run (plus the
+        comparator's correction token) host-side, token by token, so
+        stop/eos/length/consumer semantics are IDENTICAL to
+        non-speculative decoding — a mid-run hit truncates the run and
+        the slot position simply never advances over the rejected tail
+        (``store.rewind`` returns surplus blocks).
         """
         n_real = len(rows)
+        drafts = {i: self._propose(i) for i in rows}
+        width = 1 + max(len(drafts[i]) for i in rows)
+        T = _pow2(width)
         padded = rows + [rows[0]] * (_pow2(n_real) - n_real)
         groups: Dict[Sampler, list] = {}
+        spec_group: list = []            # padded-row indices that verify
+        spec_modes = set()
         where = []                       # row r -> (its group, offset)
         for r, i in enumerate(padded):
-            dev = self.slots[i].sampler.device_form()
-            lst = groups.setdefault(dev, [])
-            where.append((dev, len(lst)))
-            lst.append(r)
+            if T > 1 and drafts[i]:
+                where.append((None, len(spec_group)))
+                spec_group.append(r)
+                spec_modes.add(self.slots[i].sampler.head_mode)
+            else:
+                dev = self.slots[i].sampler.device_form()
+                lst = groups.setdefault(dev, [])
+                where.append((dev, len(lst)))
+                lst.append(r)
         order = sampler_mod.canonical_order(groups)
         row_sets = tuple(
             jnp.asarray(groups[dev] + [groups[dev][0]]
                         * (_pow2(len(groups[dev])) - len(groups[dev])),
                         jnp.int32)
             for dev in order)
-        toks = np.array([[self.slots[i].generated[-1]] for i in padded],
-                        np.int32)
-        positions = np.array([self.slot_pos[i] for i in padded], np.int32)
-        btab = self.store.block_table(padded, positions)
+        toks = np.zeros((len(padded), T), np.int32)
+        posm = np.zeros((len(padded), T), np.int32)
+        for r, i in enumerate(padded):
+            win = [self.slots[i].generated[-1]] + drafts[i]
+            base = int(self.slot_pos[i])
+            w = len(win)
+            toks[r, :w] = win
+            toks[r, w:] = win[-1]        # repeat last (token, position):
+            posm[r, :w] = base + np.arange(w)
+            posm[r, w:] = base + w - 1   # identical value, identical cell
+        btab = self.store.block_table(padded, posm[:, -1])
         denses = self.store.dense_sub(padded)
+        spec_pallas = spec_rows_op = spec_cand_op = None
+        if spec_group:
+            spec_pallas = bool(self.cfg.use_pallas) or "fused" in spec_modes
+            sg = spec_group + [spec_group[0]] \
+                * (_pow2(len(spec_group)) - len(spec_group))
+            spec_rows_op = jnp.asarray(sg, jnp.int32)
+            cand = np.full((len(sg), T - 1), -1, np.int32)
+            for o, r in enumerate(sg):
+                d = drafts[padded[r]]
+                cand[o, :len(d)] = d
+            spec_cand_op = jnp.asarray(cand)
         fn = _jitted_step(self.cfg, tuple(order), self.store.treedef,
-                          tuple(self.store.paged_mask), self.mesh)
+                          tuple(self.store.paged_mask), self.mesh,
+                          spec_pallas)
         with env.use_mesh(self.mesh):
-            outs, new_pools, new_denses = fn(
-                self.params, jnp.asarray(toks), self.store.pools, denses,
-                None if btab is None else jnp.asarray(btab),
-                jnp.asarray(positions), row_sets)
+            if spec_group:
+                outs, new_pools, new_denses = fn(
+                    self.params, jnp.asarray(toks), self.store.pools,
+                    denses, None if btab is None else jnp.asarray(btab),
+                    jnp.asarray(posm), row_sets, spec_rows_op,
+                    spec_cand_op)
+            else:
+                outs, new_pools, new_denses = fn(
+                    self.params, jnp.asarray(toks), self.store.pools,
+                    denses, None if btab is None else jnp.asarray(btab),
+                    jnp.asarray(posm[:, 0]), row_sets)
         self.stats["decode_steps"] += 1
         self.stats["fused_rows"] += n_real
         self.store.write_back(
@@ -469,12 +634,38 @@ class ServeEngine:
             [None if d is None else d[:, :n_real] for d in new_denses])
         # one device->host sync per head group, not per slot
         host = {dev: _to_host(o) for dev, o in zip(order, outs)}
+        spec_host = _to_host(outs[len(order)]) if spec_group else None
         for r in range(n_real):
             i = padded[r]
             dev, off = where[r]
             req = self.slots[i]
-            self.slot_pos[i] += 1
-            self._emit(i, req, host[dev], off)
+            if dev is None:
+                # speculative row: the comparator verified the whole
+                # draft window — emit the accepted run plus the
+                # correction token, one at a time (stop/eos/length fire
+                # exactly as they would have, mid-run included).
+                ids, acc = spec_host
+                w = len(drafts[i])
+                m = min(int(acc[off]), w)
+                self.stats["drafted"] += w
+                self.stats["accepted"] += m
+                for tok in ids[off, :m + 1]:
+                    self.slot_pos[i] += 1
+                    self._emit_token(i, req, int(tok))
+                    if req.done:
+                        break
+                if not req.done:
+                    # O(1) rewind of the rejected tail: the position
+                    # never advanced over it (stale rows are invisible
+                    # behind the kv_pos<=pos masks); surplus whole
+                    # blocks go back to the free list.
+                    self.store.rewind(i, int(self.slot_pos[i]))
+            else:
+                self.slot_pos[i] += 1
+                self._emit(i, req, host[dev], off)
+        if self.stats["drafted"]:
+            self.stats["acceptance_rate"] = (
+                self.stats["accepted"] / self.stats["drafted"])
 
     def _ensure_blocks(self, i: int, pos: int) -> bool:
         """Grow slot i's block table to cover ``pos``; preempt the
@@ -495,10 +686,22 @@ class ServeEngine:
         self.admit_order.remove(i)
 
     def _emit(self, i: int, req: Request, host_out, off: int):
-        """One token emission: pick on the host, stop-sequence match,
+        """One token emission off a sampler head output: pick on the
+        host (plus the optional candidate bus), then the shared
+        emission path."""
+        tok = req.sampler.pick(host_out, off, req.rng)
+        cands = None
+        if self._consumers and req.params.n_candidates:
+            c = req.sampler.candidate_ids(host_out, off)
+            if c is not None:
+                cands = tuple(int(x) for x in c[:req.params.n_candidates])
+        self._emit_token(i, req, int(tok), cands)
+
+    def _emit_token(self, i: int, req: Request, tok: int, cands=None):
+        """The shared per-token emission path (sampler picks and
+        verified speculative runs alike): stop-sequence match,
         completion check, then deliver a TokenChunk to every consumer
         (with finish_reason set when this token finished the request)."""
-        tok = req.sampler.pick(host_out, off, req.rng)
         req.generated.append(tok)
         if req.t_first is None:
             req.t_first = time.perf_counter()
@@ -512,12 +715,6 @@ class ServeEngine:
                 break
         self._check_done(i)
         if self._consumers:
-            cands = None
-            if req.params.n_candidates:
-                c = req.sampler.candidate_ids(host_out, off)
-                if c is not None:
-                    cands = tuple(int(x)
-                                  for x in c[:req.params.n_candidates])
             chunk = TokenChunk(rid=req.rid, token=int(tok),
                                index=len(req.generated) - 1,
                                finish_reason=req.finish_reason,

@@ -13,6 +13,11 @@ blocks drawn from one shared pool:
     ``ceil((pos+1)/block_size)`` blocks per slot, so reads scale with
     the sequence's real length, not ``max_len`` — and nothing ever
     copies the pool into a dense per-step view;
+  - speculative draft windows grow a slot by several positions at once
+    (``ensure_capacity`` to the window's last write) and REWIND in O(1)
+    when drafts are rejected (``rewind``: surplus whole blocks straight
+    back to the free list; the stale rows behind the position masks are
+    simply overwritten later);
   - non-linear cache state is NOT paged: sliding-window ring buffers are
     already O(window), recurrent (RG-LRU / RWKV) state is O(1), and
     cross-attention K/V is read-only — those stay dense per-slot.
@@ -244,6 +249,34 @@ class PagedKVStore:
             return False
         self.slot_blocks[slot].extend(self.allocator.alloc(need - have))
         return True
+
+    def can_grow(self, slot: int, pos: int) -> bool:
+        """Whether ``ensure_capacity(slot, pos)`` would succeed right
+        now, WITHOUT allocating — the engine sizes a speculative draft
+        window to the free pool instead of preempting a neighbour just
+        to speculate."""
+        if not self.any_paged:
+            return True
+        need = pos // self.block_size + 1
+        return (len(self.slot_blocks[slot]) >= need
+                or self.allocator.n_free >= need - len(self.slot_blocks[slot]))
+
+    def rewind(self, slot: int, pos: int) -> None:
+        """Shrink ``slot``'s block table to the cover of write index
+        ``pos`` — the speculative-decode rewind.  A draft window writes
+        K/V up to ``pos + K``; when only part of the window is accepted
+        the engine just decrements the slot's position (the
+        ``kv_pos <= positions[b]`` masks already make the stale rows
+        invisible, and the next step overwrites them) and returns any
+        block now WHOLLY past the cover to the free list.  O(blocks
+        freed) — at most ceil(K / block_size) per step."""
+        if not self.any_paged:
+            return
+        keep = pos // self.block_size + 1
+        extra = self.slot_blocks[slot][keep:]
+        if extra:
+            del self.slot_blocks[slot][keep:]
+            self.allocator.free(extra)
 
     def release(self, slot: int) -> None:
         self.allocator.free(self.slot_blocks[slot])

@@ -30,6 +30,16 @@ caller attaches to a request — and the single thing
                     answer to logprobs: ranked alternatives, no
                     probabilities anywhere.  Sampling still draws from
                     the first ``top_k`` survivors only.
+  spec_k            > 0 enables SPECULATIVE decoding: up to ``spec_k``
+                    draft tokens per step (proposed by the engine's
+                    Drafter) are verified in ONE forward by the reduced
+                    comparator — accept draft t_i iff argmax(logits_i)
+                    == t_i, Theorem 1 at K positions, zero softmax — so
+                    1..spec_k+1 tokens emit per iteration, bit-identical
+                    to spec_k=0.  Greedy-only (requires top_k == 1, a
+                    'reduced'/'fused' head and n_candidates == 0: the
+                    verification IS the comparator, and faking it under
+                    the softmax baseline would poison every A/B claim).
 
 Frozen + hashable on purpose: params ride into jit-cache keys via the
 resolved Sampler, and a shared default instance is safe.
@@ -76,6 +86,7 @@ class SamplingParams:
     stop: StopSpec = ()
     head_mode: Optional[str] = None
     n_candidates: int = 0
+    spec_k: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "stop", _normalize_stop(self.stop))
@@ -88,6 +99,24 @@ class SamplingParams:
         if self.n_candidates < 0:
             raise ValueError(
                 f"n_candidates={self.n_candidates}: must be >= 0")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k={self.spec_k}: must be >= 0 "
+                             "(0 disables speculative decoding)")
+        if self.spec_k > 0:
+            # comparator-only verification is exact for GREEDY decoding;
+            # anything else would silently change the sampling law (or
+            # fake the softmax baseline) — reject loudly.
+            if self.top_k != 1 or self.n_candidates != 0:
+                raise ValueError(
+                    f"spec_k={self.spec_k} requires greedy decoding: "
+                    f"top_k == 1 and n_candidates == 0 (got top_k="
+                    f"{self.top_k}, n_candidates={self.n_candidates})")
+            if self.head_mode not in (None, "reduced", "fused"):
+                raise ValueError(
+                    f"spec_k={self.spec_k} verifies through the reduced "
+                    f"comparator; head_mode={self.head_mode!r} is not "
+                    "supported (use 'reduced' or 'fused' — running it "
+                    "under the softmax baseline would fake the A/B)")
 
     @property
     def greedy(self) -> bool:

@@ -23,7 +23,15 @@ Endpoints:
 
   GET /v1/stats             engine counters (prefills, decode_steps,
                             iterations, fused_rows, completed,
-                            deferred, preemptions) + KV-pool usage.
+                            deferred, preemptions, drafted, accepted,
+                            acceptance_rate) + KV-pool usage.
+
+  GET /healthz              liveness: 200 {"ok": true, ...} while the
+                            engine pump thread is healthy, 503 once it
+                            has died (load balancers probe this).
+
+Error responses — including 404s for unknown paths — are always JSON
+(``{"error": ...}``), never empty bodies.
 
 Requests are served by a ``ThreadingHTTPServer``: handler threads only
 submit and read per-request chunk queues; the engine itself runs on the
@@ -39,7 +47,7 @@ from repro.serve.api import LLM
 from repro.serve.params import SamplingParams
 
 _PARAM_KEYS = ("max_new_tokens", "temperature", "top_k", "seed", "stop",
-               "head_mode", "n_candidates")
+               "head_mode", "n_candidates", "spec_k")
 
 
 def params_from_json(body: dict) -> SamplingParams:
@@ -72,8 +80,30 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def send_error(self, code, message=None, explain=None):
+        # stdlib default is an HTML error page; every error THIS server
+        # produces — including 501s for unknown methods — is JSON, so
+        # clients never have to parse two formats.
+        short = self.responses.get(code, ("error",))[0]
+        try:
+            self._json(code, {"error": message or short})
+        except OSError:
+            pass                       # client already gone
+
     # -- endpoints -----------------------------------------------------------
     def do_GET(self):
+        if self.path == "/healthz":
+            # liveness for load balancers: the server socket answering
+            # is not enough — the engine pump thread must be alive (or
+            # cleanly not started, for inline-stepping deployments) and
+            # must not have died on an engine error.
+            err = self.llm._pump_error
+            if err is not None:
+                return self._json(503, {"ok": False,
+                                        "error": f"engine pump died: {err}"})
+            return self._json(200, {"ok": True,
+                                    "pumping": self.llm._pumping,
+                                    "has_work": self.llm.engine.has_work})
         if self.path != "/v1/stats":
             return self._json(404, {"error": f"unknown path {self.path}"})
         self._json(200, {"engine": self.llm.stats,

@@ -13,13 +13,15 @@ engine lifecycle:
     softmax greedy tokens through the facade (Theorem 1 at API level);
   - ``LLM.stream`` yielding incrementally while a second request is in
     flight;
-  - the HTTP server round-tripping streamed == non-streamed tokens;
-  - the deprecated ``serve_topk_*`` aliases warning once.
+  - ``engine.cancel`` KV hygiene: a mid-stream cancel returns the
+    slot's blocks to the free list and a queued request admits into the
+    freed space;
+  - the HTTP server round-tripping streamed == non-streamed tokens,
+    ``/healthz`` liveness, and JSON 404 bodies.
 """
 import json
 import threading
 import urllib.request
-import warnings
 
 import jax
 import numpy as np
@@ -324,6 +326,15 @@ def test_http_server_roundtrip():
         assert stats["engine"]["decode_steps"] == \
             stats["engine"]["iterations"]
         assert stats["kv"]["blocks_free"] == stats["kv"]["num_blocks"]
+        # healthz: engine liveness for load balancers
+        health = json.loads(urllib.request.urlopen(
+            f"{base}/healthz", timeout=60).read())
+        assert health["ok"] is True and health["pumping"] is True
+        # unknown path -> 404 with a JSON error body, never empty
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"{base}/no/such", timeout=60)
+        assert e.value.code == 404
+        assert "error" in json.loads(e.value.read())
         # malformed prompt -> 400, not a hung connection
         with pytest.raises(urllib.error.HTTPError) as e:
             post({"prompt": "not token ids"})
@@ -339,23 +350,36 @@ def test_http_server_roundtrip():
 
 
 # ---------------------------------------------------------------------------
-# Deprecated legacy entry points
+# engine.cancel KV hygiene
 # ---------------------------------------------------------------------------
-def test_deprecated_topk_aliases_warn_once():
-    from repro.models import api as model_api
-
+def test_cancel_mid_stream_frees_blocks_and_admits_queued():
+    """Cancelling a streaming request mid-generation must return its
+    slot's blocks to the free list immediately — and a request that was
+    DEFERRED on the exhausted pool must then admit into the freed space
+    and finish normally."""
     cfg, params = _mk()
-    batch = {"tokens": np.zeros((1, 4), np.int32)}
-    model_api._warned_topk_aliases.clear()
-    with pytest.warns(DeprecationWarning):
-        (vals, idxs), cache = model_api.serve_topk_prefill(
-            params, cfg, batch, 16, k=4)
-    assert vals.shape == (1, 4) and idxs.shape == (1, 4)
-    # matches the Sampler-protocol path it now delegates to
-    (v2, i2), _ = model_api.serve_prefill(params, cfg, batch, 16,
-                                          TopK(4))
-    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(i2))
-    with warnings.catch_warnings(record=True) as rec:  # second call: silent
-        warnings.simplefilter("always")
-        model_api.serve_topk_prefill(params, cfg, batch, 16, k=4)
-    assert not [w for w in rec if w.category is DeprecationWarning]
+    # 2 slots but a pool the hog occupies ENTIRELY: the waiter sees a
+    # free slot yet defers on blocks until the cancel frees them
+    llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1,
+              block_size=8, num_blocks=3)
+    hog_prompt = np.arange(2, 18, dtype=np.int32) % cfg.vocab_size  # 16 tok
+    waiter_prompt = np.arange(3, 11, dtype=np.int32) % cfg.vocab_size
+    it = llm.stream(hog_prompt, SamplingParams(max_new_tokens=40))
+    first = next(it)
+    assert first.finish_reason is None
+    baseline = llm.kv_usage()
+    assert baseline["blocks_free"] == 0            # the hog owns the pool
+    waiter = llm.submit(waiter_prompt, SamplingParams(max_new_tokens=4))
+    # the waiter cannot admit while the hog holds every block
+    with llm._lock:
+        for _ in range(3):
+            llm.engine.step()
+    assert not waiter.generated and llm.stats["deferred"] >= 1
+    it.close()                                     # client disconnects
+    assert llm.stats["cancelled"] == 1
+    kv = llm.kv_usage()
+    assert kv["blocks_free"] == kv["num_blocks"]   # blocks back to baseline
+    llm._drive_until(lambda: waiter.done)          # freed space admits it
+    assert len(waiter.generated) == 4
+    kv = llm.kv_usage()
+    assert kv["blocks_free"] == kv["num_blocks"]

@@ -1,0 +1,470 @@
+"""Speculative decoding with the comparator-only verification unit.
+
+Theorem 1 extended from one emission to an accepted run: greedy
+verification of K draft tokens is argmax(logits_i) == t_i at K
+positions — pure max-comparisons, zero softmax evaluations.  Covers:
+
+  - ``PromptLookupDrafter``: n-gram matching, recency preference,
+    budget clamping, no-match behaviour;
+  - ``ops.verify_draft``: ref twin vs the Pallas comparator bank vs a
+    python loop oracle (property-swept shapes, -1 ragged padding);
+  - multi-query ``paged_attention``: a (B, T) draft window equals T
+    independent single-query calls, ref and kernel alike;
+  - model level: one multi-token ``lm.decode_step`` is bit-exact with a
+    sequential single-token replay (the accepted-prefix invariant);
+  - engine level: speculative generations are TOKEN-IDENTICAL to
+    non-speculative greedy and the softmax baseline on ragged mixed
+    traffic (spec + top-k + temperature rows in the same fused step),
+    across paged/dense layouts, with stop/eos truncation mid-accepted-
+    run, under forced preemption, and with acceptance_rate > 0 plus
+    more emitted tokens than iterations on repetitive text;
+  - KV hygiene: ``store.rewind`` frees rejected-tail blocks mid-flight
+    and every block returns to the free list at exit;
+  - submit guards: spec_k rejects non-greedy sampling, the softmax
+    head, the cohort scheduler and non-rewindable (windowed/recurrent)
+    cache layouts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # bare env: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import ARCHS, smoke_config
+from repro.kernels import ops, ref
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.params import SamplingParams
+from repro.serve.spec import Drafter, PromptLookupDrafter
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk(arch="qwen3-0.6b", key=KEY):
+    cfg = smoke_config(ARCHS[arch])
+    return cfg, lm.init_params(cfg, key)
+
+
+def _serve(params, cfg, prompts, plist, **kw):
+    eng = ServeEngine(params, cfg, **kw)
+    reqs = [Request(i, p.copy(), params=sp)
+            for i, (p, sp) in enumerate(zip(prompts, plist))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# PromptLookupDrafter
+# ---------------------------------------------------------------------------
+def test_prompt_lookup_matches_and_recency():
+    d = PromptLookupDrafter(ngram=2)
+    assert isinstance(d, Drafter)
+    # trailing (1, 2) occurred earlier; continuation is (3, 4)
+    assert d.propose([1, 2, 3, 4, 9, 1, 2], 2) == [3, 4]
+    # budget clamps the continuation
+    assert d.propose([1, 2, 3, 4, 9, 1, 2], 1) == [3]
+    # the MOST RECENT earlier occurrence wins: (1,2)->7 beats (1,2)->3
+    assert d.propose([1, 2, 3, 0, 1, 2, 7, 8, 1, 2], 2) == [7, 8]
+    # no match at ngram=2, fallback to 1-gram: last earlier 5 -> 6
+    assert d.propose([5, 6, 0, 5], 3) == [6, 0, 5]
+    # repeated-token run: proposes continued repetition (bounded by the
+    # matched occurrence's real continuation)
+    assert d.propose([9, 4, 4, 4], 2) == [4]
+    assert d.propose([9, 4, 4, 4, 4], 2) == [4, 4]
+    # nothing to match
+    assert d.propose([1, 2, 3], 2) == [] or True  # 1-gram may still hit
+    assert d.propose([7], 4) == []                # no earlier occurrence
+    assert d.propose([], 4) == []
+    assert d.propose([1, 2, 3, 1, 2], 0) == []    # zero budget
+    # max_match_len bounds independently of k
+    dd = PromptLookupDrafter(ngram=1, max_match_len=2)
+    assert dd.propose([3, 1, 2, 4, 5, 3], 8) == [1, 2]
+    with pytest.raises(ValueError):
+        PromptLookupDrafter(ngram=1, min_ngram=2)
+    with pytest.raises(ValueError):
+        PromptLookupDrafter(max_match_len=0)
+
+
+# ---------------------------------------------------------------------------
+# verify_draft: ref twin, Pallas kernel, loop oracle
+# ---------------------------------------------------------------------------
+def _verify_oracle(h, w, cand):
+    """Plain-python semantics: per-position argmax, leading accept run."""
+    logits = np.asarray(h, np.float64) @ np.asarray(w, np.float64)
+    ids = np.asarray(
+        jnp.argmax(jnp.asarray(h, jnp.float32).reshape(-1, h.shape[-1])
+                   @ jnp.asarray(w, jnp.float32), axis=-1)
+    ).reshape(h.shape[0], h.shape[1])
+    del logits
+    acc = []
+    for b in range(h.shape[0]):
+        m = 0
+        for i in range(cand.shape[1]):
+            if ids[b, i] != cand[b, i]:
+                break
+            m += 1
+        acc.append(m)
+    return ids, np.asarray(acc)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=5),
+       st.integers(min_value=2, max_value=6),
+       st.sampled_from([16, 33, 130]))
+def test_verify_draft_ref_matches_pallas_and_oracle(b, t, v):
+    rng = np.random.default_rng([b, t, v])
+    h = jnp.asarray(rng.normal(size=(b, t, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, v)), jnp.float32)
+    ids_true = np.asarray(ref.fused_argmax_head(
+        h.reshape(b * t, 24), w)).reshape(b, t)
+    cand = ids_true[:, : t - 1].copy()
+    # perturb some rows: reject at a random index; -1-pad another tail
+    for row in range(b):
+        u = rng.random()
+        if u < 0.4 and t > 1:
+            j = int(rng.integers(0, t - 1))
+            cand[row, j] = (cand[row, j] + 1) % v
+        elif u < 0.7 and t > 2:
+            cand[row, rng.integers(0, t - 1):] = -1     # ragged width
+    cand = jnp.asarray(cand, jnp.int32)
+    ids_r, acc_r = ref.verify_draft(h, w, cand)
+    ids_p, acc_p = ops.verify_draft(h, w, cand, use_pallas=True,
+                                    interpret=True)
+    ids_o, acc_o = _verify_oracle(np.asarray(h), np.asarray(w),
+                                  np.asarray(cand))
+    np.testing.assert_array_equal(np.asarray(ids_r), ids_o)
+    np.testing.assert_array_equal(np.asarray(ids_p), ids_o)
+    np.testing.assert_array_equal(np.asarray(acc_r), acc_o)
+    np.testing.assert_array_equal(np.asarray(acc_p), acc_o)
+
+
+def test_verify_draft_accept_semantics_exact():
+    """Hand-built case: accept counts stop at the first mismatch and at
+    the -1 ragged padding; full acceptance reaches K."""
+    h = jnp.eye(4, dtype=jnp.float32)[None].repeat(3, 0)     # (3, 4, 4)
+    w = jnp.eye(4, dtype=jnp.float32)       # argmax after position t = t
+    # cand[i] is the draft fed at position i+1, checked against ids[i]
+    cand = jnp.asarray([[0, 1, 2],           # all accepted
+                        [0, 9, 2],           # mismatch at index 1
+                        [0, -1, -1]], jnp.int32)             # width 1
+    ids, acc = ref.verify_draft(h, w, cand)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.tile(np.arange(4), (3, 1)))
+    assert list(np.asarray(acc)) == [3, 1, 1]
+    # greedy emits ids[:accept+1]: the accepted run + the correction
+    assert [int(x) for x in np.asarray(ids)[1, :2]] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Multi-query paged attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=30),
+       st.integers(min_value=2, max_value=4),
+       st.sampled_from([4, 8]),
+       st.sampled_from([1, 2]))
+def test_paged_attention_multiquery_equals_singles(base, t, bs, g):
+    """A (B, T) draft window through one call == T single-query calls
+    at each position — ref twin and Pallas kernel alike."""
+    rng = np.random.default_rng([base, t, bs, g])
+    b, hkv, hd = 2, 2, 8
+    hq = g * hkv
+    nb = (base + t) // bs + 1
+    nblocks = b * nb + 2
+    kp = jnp.asarray(rng.normal(size=(nblocks, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nblocks, bs, hkv, hd)), jnp.float32)
+    bt = jnp.asarray(np.stack([rng.choice(nblocks, nb, replace=False)
+                               for _ in range(b)]), jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, t, hq, hd)), jnp.float32)
+    pos = jnp.asarray(np.stack([base + np.arange(t)] * b), jnp.int32)
+    multi_ref = ref.paged_attention(q, kp, vp, bt, pos)
+    multi_pal = ops.paged_attention(q, kp, vp, bt, pos, use_pallas=True,
+                                    interpret=True)
+    for ti in range(t):
+        single = ref.paged_attention(q[:, ti], kp, vp, bt, pos[:, ti])
+        np.testing.assert_allclose(np.asarray(multi_ref[:, ti]),
+                                   np.asarray(single),
+                                   rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(multi_pal),
+                               np.asarray(multi_ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Model level: multi-token step == sequential replay
+# ---------------------------------------------------------------------------
+def test_decode_step_multitoken_matches_sequential_replay():
+    cfg, params = _mk()
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    h, cache = lm.prefill(params, cfg,
+                          {"tokens": jnp.asarray(prompt)[None]}, 32)
+    w = lm.lm_head_weight(params, cfg)
+    tok = int(jnp.argmax(h[0] @ w))
+    seq, c, pos = [], cache, 7
+    cur = tok
+    for _ in range(4):
+        hh, c = lm.decode_step(params, cfg,
+                               jnp.asarray([[cur]], jnp.int32), c,
+                               jnp.asarray([pos], jnp.int32))
+        cur = int(jnp.argmax(hh[0] @ w))
+        seq.append(cur)
+        pos += 1
+    toks = jnp.asarray([[tok] + seq[:3]], jnp.int32)
+    posm = jnp.asarray([[7, 8, 9, 10]], jnp.int32)
+    hm, _ = lm.decode_step(params, cfg, toks, cache, posm)
+    assert hm.shape == (1, 4, cfg.d_model)
+    ids, acc = ops.verify_draft(hm, w, jnp.asarray([seq[:3]], jnp.int32))
+    assert [int(x) for x in np.asarray(ids)[0]] == seq      # bit-exact
+    assert int(acc[0]) == 3                                 # full accept
+    # width padding repeats the last real (token, position) — a no-op
+    toks_p = jnp.asarray([[tok, seq[0], seq[1], seq[1]]], jnp.int32)
+    posm_p = jnp.asarray([[7, 8, 9, 9]], jnp.int32)
+    hp, _ = lm.decode_step(params, cfg, toks_p, cache, posm_p)
+    idp = [int(jnp.argmax(hp[0, t] @ w)) for t in range(4)]
+    assert idp[:3] == seq[:3] and idp[3] == idp[2]
+
+
+# ---------------------------------------------------------------------------
+# Engine level: bit-exactness, acceptance, throughput shape
+# ---------------------------------------------------------------------------
+def test_spec_equals_greedy_and_softmax_ragged_mixed_traffic():
+    """The acceptance shape: ragged mixed traffic (staggered prompt
+    lengths; speculative greedy + top-k + temperature rows in the same
+    fused steps) serves token-identically with speculation on/off, and
+    the greedy rows match the softmax baseline — across paged and dense
+    layouts."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(5)
+    plens = [3, 9, 14, 22, 31, 6]
+    prompts = []
+    for j, n in enumerate(plens):
+        if j % 2 == 0:           # half repetitive: drafting has traction
+            pat = rng.integers(0, cfg.vocab_size, 3)
+            prompts.append(np.tile(pat, (n + 2) // 3)[:n].astype(np.int32))
+        else:
+            prompts.append(
+                rng.integers(0, cfg.vocab_size, n).astype(np.int32))
+
+    def plist(spec_k):
+        out = []
+        for i in range(len(prompts)):
+            if i % 3 == 2:
+                out.append(SamplingParams(max_new_tokens=12, top_k=4,
+                                          temperature=0.8, seed=i))
+            elif i % 3 == 1:
+                out.append(SamplingParams(max_new_tokens=12,
+                                          head_mode="temperature",
+                                          temperature=0.7, seed=i))
+            else:
+                out.append(SamplingParams(max_new_tokens=12,
+                                          spec_k=spec_k))
+        return out
+
+    base, ebase = _serve(params, cfg, prompts, plist(0),
+                         n_slots=4, max_len=96, eos_id=1)
+    spec, espec = _serve(params, cfg, prompts, plist(4),
+                         n_slots=4, max_len=96, eos_id=1)
+    dense, _ = _serve(params, cfg, prompts, plist(4),
+                      n_slots=4, max_len=96, eos_id=1, kv_layout="dense")
+    assert [r.generated for r in spec] == [r.generated for r in base]
+    assert [r.generated for r in dense] == [r.generated for r in base]
+    assert espec.stats["drafted"] > 0 and espec.stats["accepted"] > 0
+    assert 0 < espec.stats["acceptance_rate"] <= 1
+    assert espec.stats["decode_steps"] == espec.stats["iterations"]
+    # greedy rows (every i % 3 == 0) through the softmax baseline:
+    greedy_prompts = [p for i, p in enumerate(prompts) if i % 3 == 0]
+    soft, _ = _serve(params, cfg, greedy_prompts,
+                     [SamplingParams(max_new_tokens=12)] * len(
+                         greedy_prompts),
+                     n_slots=4, max_len=96, eos_id=1, head_mode="softmax")
+    assert [r.generated for r in soft] == \
+        [r.generated for i, r in enumerate(spec) if i % 3 == 0]
+
+
+def test_spec_emits_more_tokens_than_iterations_on_repetitive_text():
+    cfg, params = _mk()
+    rng = np.random.default_rng(1)
+    prompts = [np.tile(rng.integers(0, cfg.vocab_size, 4), 6)
+               .astype(np.int32) for _ in range(4)]
+    plist = [SamplingParams(max_new_tokens=24, spec_k=4)] * 4
+    reqs, eng = _serve(params, cfg, prompts, plist,
+                       n_slots=4, max_len=128, eos_id=-1)
+    emitted = sum(len(r.generated) for r in reqs)
+    assert emitted == 4 * 24
+    assert emitted > eng.stats["iterations"]       # multi-token steps won
+    assert eng.stats["acceptance_rate"] > 0.3, eng.stats
+    base, ebase = _serve(params, cfg, prompts,
+                         [SamplingParams(max_new_tokens=24)] * 4,
+                         n_slots=4, max_len=128, eos_id=-1)
+    assert [r.generated for r in reqs] == [r.generated for r in base]
+    assert eng.stats["iterations"] < ebase.stats["iterations"]
+
+
+def test_spec_stop_eos_and_length_truncate_mid_run():
+    """A stop sequence / eos landing INSIDE an accepted run must
+    truncate emissions exactly where non-speculative decoding stops —
+    same tokens, same finish_reason — and the rejected tail must not
+    leak into the cache."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(9)
+    prompt = np.tile(rng.integers(0, cfg.vocab_size, 3), 6).astype(np.int32)
+    probe, _ = _serve(params, cfg, [prompt],
+                      [SamplingParams(max_new_tokens=12)],
+                      n_slots=1, max_len=96, eos_id=-1)
+    gen = probe[0].generated
+    assert len(gen) == 12
+    for kw in (dict(stop=[tuple(gen[4:6])]),):
+        a, _ = _serve(params, cfg, [prompt],
+                      [SamplingParams(max_new_tokens=12, **kw)],
+                      n_slots=1, max_len=96, eos_id=-1)
+        b, _ = _serve(params, cfg, [prompt],
+                      [SamplingParams(max_new_tokens=12, spec_k=4, **kw)],
+                      n_slots=1, max_len=96, eos_id=-1)
+        assert a[0].generated == b[0].generated
+        assert a[0].finish_reason == b[0].finish_reason == "stop"
+    # eos mid-generation
+    eos = gen[5]
+    a, _ = _serve(params, cfg, [prompt],
+                  [SamplingParams(max_new_tokens=12)],
+                  n_slots=1, max_len=96, eos_id=eos)
+    b, eb = _serve(params, cfg, [prompt],
+                   [SamplingParams(max_new_tokens=12, spec_k=4)],
+                   n_slots=1, max_len=96, eos_id=eos)
+    assert a[0].generated == b[0].generated
+    assert a[0].finish_reason == b[0].finish_reason
+    kv = eb.store.usage()
+    assert kv["blocks_free"] == kv["num_blocks"]
+
+
+def test_spec_identical_under_forced_preemption():
+    """Tight pool: deferral + preempt-to-queue + re-prefill (including
+    DOUBLE preemption of the same request — the orig_prompt fold
+    regression) must not change speculative generations."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(7)
+    prompts = [np.tile(rng.integers(0, cfg.vocab_size, 4), 2)
+               .astype(np.int32) for _ in range(3)]
+    plist = [SamplingParams(max_new_tokens=12, spec_k=4) for _ in range(3)]
+    ample, _ = _serve(params, cfg, prompts, plist, n_slots=2, max_len=64,
+                      eos_id=-1, block_size=8)
+    tight, etight = _serve(params, cfg, prompts, plist, n_slots=2,
+                           max_len=64, eos_id=-1, block_size=8,
+                           num_blocks=4)
+    assert etight.stats["preemptions"] >= 2      # incl. a double preempt
+    assert [r.generated for r in tight] == [r.generated for r in ample]
+    # the fold regression: re-prefill prompts never exceed orig + gen
+    for r in tight:
+        assert len(r.prompt) <= len(r.orig_prompt) + len(r.generated)
+
+
+def test_spec_rewind_returns_rejected_tail_blocks():
+    """A drafter that always proposes garbage forces full rejection
+    every step: the draft window's extra blocks must come back via
+    ``store.rewind`` (pool usage tracks the REAL position, not the
+    speculated one), and generations still match plain greedy."""
+    class GarbageDrafter:
+        def propose(self, history, k):
+            return [0] * k      # token 0 with probability ~1/V of a hit
+
+    cfg, params = _mk()
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab_size, 4).astype(np.int32)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=256, eos_id=-1,
+                      block_size=8, drafter=GarbageDrafter())
+    req = Request(0, prompt.copy(),
+                  params=SamplingParams(max_new_tokens=6, spec_k=16))
+    eng.submit(req)
+    peak_over_real = []
+    while eng.has_work:
+        eng.step()
+        if eng.slots[0] is not None:
+            owned = len(eng.store.slot_blocks[0])
+            need = int(eng.slot_pos[0]) // eng.store.block_size + 1
+            peak_over_real.append(owned - need)
+    # after every step the slot owns exactly the cover of its REAL
+    # position — the 16-token speculative windows were rewound
+    assert peak_over_real and all(d == 0 for d in peak_over_real), \
+        peak_over_real
+    base, _ = _serve(params, cfg, [prompt],
+                     [SamplingParams(max_new_tokens=6)],
+                     n_slots=1, max_len=256, eos_id=-1, block_size=8)
+    assert req.generated == base[0].generated
+    kv = eng.store.usage()
+    assert kv["blocks_free"] == kv["num_blocks"]
+
+
+def test_store_rewind_unit():
+    from repro.serve.paged_kv import PagedKVStore
+
+    cfg, params = _mk()
+    store = PagedKVStore(params, cfg, n_slots=2, max_len=64, block_size=8)
+    store.alloc_blocks(0, 10)                     # 2 blocks: pos 0..15
+    assert store.ensure_capacity(0, 33)           # grow to 5 blocks
+    assert len(store.slot_blocks[0]) == 5
+    free_before = store.allocator.n_free
+    store.rewind(0, 17)                           # keep cover of pos 17
+    assert len(store.slot_blocks[0]) == 3
+    assert store.allocator.n_free == free_before + 2
+    store.rewind(0, 17)                           # idempotent
+    assert len(store.slot_blocks[0]) == 3
+    assert store.can_grow(0, 33)
+    store.release(0)
+
+
+# ---------------------------------------------------------------------------
+# Guards
+# ---------------------------------------------------------------------------
+def test_spec_params_and_submit_guards():
+    with pytest.raises(ValueError):
+        SamplingParams(spec_k=-1)
+    with pytest.raises(ValueError):               # greedy only
+        SamplingParams(spec_k=4, top_k=2)
+    with pytest.raises(ValueError):               # no candidate bus
+        SamplingParams(spec_k=4, n_candidates=2)
+    with pytest.raises(ValueError):               # no softmax verify
+        SamplingParams(spec_k=4, head_mode="softmax")
+    SamplingParams(spec_k=4, head_mode="fused")   # ok
+    SamplingParams(spec_k=4, temperature=0.0)     # greedy: ok
+
+    cfg, params = _mk()
+    prompt = np.arange(4, dtype=np.int32)
+    # engine head default 'softmax' + spec request without an override
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=32,
+                      head_mode="softmax")
+    with pytest.raises(ValueError, match="comparator"):
+        eng.submit(Request(0, prompt.copy(),
+                           params=SamplingParams(spec_k=2)))
+    # cohort scheduler has no multi-token step
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=32,
+                      scheduler="cohort")
+    with pytest.raises(ValueError, match="fused"):
+        eng.submit(Request(0, prompt.copy(),
+                           params=SamplingParams(spec_k=2)))
+    # windowed/recurrent caches cannot rewind a rejected draft
+    hcfg, hparams = _mk("recurrentgemma-2b")
+    heng = ServeEngine(hparams, hcfg, n_slots=1, max_len=32)
+    assert not heng.spec_capable
+    with pytest.raises(ValueError, match="rewound"):
+        heng.submit(Request(0, prompt.copy(),
+                            params=SamplingParams(spec_k=2)))
+    # and a spec_k=0 request on the same engine still serves fine
+    heng.submit(Request(1, prompt.copy(),
+                        params=SamplingParams(max_new_tokens=2)))
+    heng.run()
+    # MoE: capacity-dropping routing makes decode logits depend on the
+    # rest of the batch — draft tokens would shift expert-capacity
+    # ranks, so comparator verification cannot be bit-exact.  Rejected.
+    mcfg, mparams = _mk("phi3.5-moe-42b-a6.6b")
+    meng = ServeEngine(mparams, mcfg, n_slots=1, max_len=32)
+    assert not meng.spec_capable
+    with pytest.raises(ValueError, match="MoE"):
+        meng.submit(Request(0, prompt.copy(),
+                            params=SamplingParams(spec_k=2)))
