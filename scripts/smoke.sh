@@ -86,6 +86,55 @@ print(f"SPEC SMOKE OK: {emitted} tokens in {stats['iterations']} "
       "to non-spec greedy and softmax")
 EOF
 
+echo "== chunked-prefill smoke (mixed traffic, --chunk-size 16: long +"
+echo "   short prompts in one token-budget scheduler; streamed =="
+echo "   non-streamed == one-shot == softmax) =="
+timeout 240 python - <<'EOF'
+import jax, numpy as np
+from repro.configs import ARCHS, smoke_config
+from repro.models import lm
+from repro.serve.api import LLM
+from repro.serve.params import SamplingParams
+
+cfg = smoke_config(ARCHS["qwen3-0.6b"])
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+# mixed traffic: one long prompt head-of-line, shorts behind it
+plens = [53, 4, 9, 37, 6, 18]
+prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+           for n in plens]
+sp = SamplingParams(max_new_tokens=6)
+
+def gens(chunk, head_mode="reduced"):
+    llm = LLM(params, cfg, n_slots=4, max_len=96, eos_id=1,
+              head_mode=head_mode, chunk_size=chunk)
+    outs = llm.generate([p.copy() for p in prompts], sp)
+    return [o.token_ids for o in outs], llm.stats
+
+oneshot, _ = gens(None)
+soft, _ = gens(None, head_mode="softmax")
+chunked, stats = gens(16)
+assert chunked == oneshot, "chunked != one-shot admission"
+assert chunked == soft, "Theorem 1 violated (chunked vs softmax)"
+assert stats["prefill_chunks"] == sum(-(-n // 16) for n in plens), stats
+assert stats["decode_steps"] == stats["iterations"], stats
+
+# streaming over the same chunked engine: identical tokens, first chunk
+# arrives while other traffic is in flight
+llm = LLM(params, cfg, n_slots=4, max_len=96, eos_id=1,
+          head_mode="reduced", chunk_size=16)
+bg = [llm.submit(p.copy(), sp) for p in prompts[1:]]
+streamed = [c.token for c in llm.stream(prompts[0].copy(), sp)]
+llm._drive_until(lambda: all(r.done for r in bg))
+assert tuple(streamed) == tuple(chunked[0]), \
+    "streamed != non-streamed (chunked)"
+assert [tuple(r.generated) for r in bg] == [tuple(g) for g in chunked[1:]], \
+    "bg traffic diverged"
+print(f"CHUNKED SMOKE OK: {stats['prefill_chunks']} prefill chunks over "
+      f"{stats['iterations']} iterations, chunked == one-shot == softmax, "
+      "streamed == non-streamed")
+EOF
+
 echo "== HTTP smoke (SSE frontend: streamed == non-streamed, reduced =="
 echo "   softmax over the wire, healthz, stats contract) =="
 timeout 300 bash scripts/http_smoke.sh

@@ -15,13 +15,17 @@ fuses all active slots into one step regardless of where each sequence
 is), so ``positions`` is a per-row scalar-prefetch vector and the
 valid-key mask is per row: ``kv_pos <= positions[b]``.
 
-Decode is also MULTI-TOKEN (speculative): a row may carry ``T = K + 1``
-query tokens — its last committed token plus K draft tokens — each at
-its own position, verified in ONE forward.  ``q`` grows a T axis and
-``positions`` becomes a per-(row, query) ``(B, T)`` matrix; query ``t``
-masks ``kv_pos <= positions[b, t]``, which IS the causal mask inside
-the draft window (draft positions ascend) while padding queries that
-repeat their row's last (token, position) reproduce its output exactly.
+Decode is also MULTI-TOKEN: a row may carry ``T > 1`` query tokens,
+each at its own position — a speculative draft window (last committed
+token plus K drafts, verified in ONE forward) or a PREFILL CHUNK of
+consecutive prompt positions (chunked admission: the engine scatters
+the chunk's K/V into the row's pool blocks and serves it beside the
+decode rows in the same call).  ``q`` grows a T axis and ``positions``
+becomes a per-(row, query) ``(B, T)`` matrix; query ``t`` masks
+``kv_pos <= positions[b, t]``, which IS the causal mask inside any
+ascending window — draft or chunk — while padding queries that repeat
+their row's last (token, position) reproduce its output exactly, so
+mixed widths share one compiled call.
 
   grid = (B, nb)                      # nb = max blocks over the batch
   q     (1, T, Hq, hd)  indexed (b, 0, 0, 0)

@@ -126,16 +126,17 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions):
     """Ragged decode-step attention reading K/V through a block table.
 
     q: (B, Hq, hd) per-row query for the token at ``positions[b]`` — or
-    (B, T, Hq, hd) for a MULTI-TOKEN (speculative) step, where query
-    ``t`` of row ``b`` sits at ``positions[b, t]``;
+    (B, T, Hq, hd) for a MULTI-TOKEN step (a speculative draft window
+    or a chunked-prefill chunk), where query ``t`` of row ``b`` sits at
+    ``positions[b, t]``;
     k_pool, v_pool: (num_blocks, block_size, Hkv, hd) SHARED pools;
     block_tables: (B, nb) int32 — row b's view position ``j`` lives in
     ``pool[block_tables[b, j // bs], j % bs]``;
     positions: (B,) int32 ((B, T) in the multi-token form) — each query
     attends over kv positions <= its own position (a scalar broadcasts
     to the whole batch), so every row can sit at its own sequence length
-    inside one call, and in a speculative step every draft position
-    masks exactly its causal history.
+    inside one call, and in any ascending multi-token window — draft or
+    prefill chunk — every position masks exactly its causal history.
 
     Returns (B, Hq, hd) / (B, T, Hq, hd) in q.dtype.  The math is
     EXACTLY the dense decode attention of ``models.layers.attention``

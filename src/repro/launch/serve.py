@@ -4,7 +4,8 @@
       --requests 8 --slots 4 \
       [--head-mode reduced|softmax|fused|sharded|temperature] \
       [--kv-layout paged|dense] [--top-k 4 --temperature 0.8] \
-      [--spec-k 4] [--serve-http 8000]
+      [--spec-k 4] [--chunk-size 16 [--token-budget 64]] \
+      [--serve-http 8000]
 
 ``--serve-http PORT`` swaps the batch run for the network frontend
 (serve/server.py): an SSE ``POST /v1/completions`` + ``GET /v1/stats``
@@ -68,6 +69,19 @@ def main():
                     help="fused: ONE jitted ragged decode step per "
                          "iteration over all slots (default); cohort: "
                          "the PR 2 position-cohort baseline")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="chunked prefill: admit prompts into the fused "
+                         "step this many tokens per iteration instead of "
+                         "one monolithic prefill call — bounds the stall "
+                         "a long prompt inflicts on in-flight decodes "
+                         "and admits with only the first chunk's KV "
+                         "cover free (fused scheduler + paged KV only; "
+                         "output is bit-identical either way)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="cap on real tokens (decode rows + prefill "
+                         "chunk widths) per fused iteration; chunk "
+                         "widths shrink to fit, decode rows are always "
+                         "served (requires --chunk-size)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
                     help="instead of the batch run: start the SSE HTTP "
@@ -96,6 +110,8 @@ def main():
                   eos_id=1, head_mode=args.head_mode,
                   kv_layout=args.kv_layout, block_size=args.block_size,
                   num_blocks=args.num_blocks, scheduler=args.scheduler,
+                  chunk_size=args.chunk_size,
+                  token_budget=args.token_budget,
                   mesh=mesh, seed=args.seed)
         serve_forever(llm, host=args.http_host, port=args.serve_http)
         return
@@ -103,6 +119,8 @@ def main():
                       eos_id=1, head_mode=args.head_mode,
                       kv_layout=args.kv_layout, block_size=args.block_size,
                       num_blocks=args.num_blocks, scheduler=args.scheduler,
+                      chunk_size=args.chunk_size,
+                      token_budget=args.token_budget,
                       mesh=mesh, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -128,7 +146,10 @@ def main():
     spec = (f"drafted={stats['drafted']} accepted={stats['accepted']} "
             f"acceptance={stats['acceptance_rate']:.2f} "
             if args.spec_k else "")
+    chunk = (f"prefill_chunks={stats['prefill_chunks']} "
+             if eng.chunk_size is not None else "")
     print(f"sampler={sampler} kv={args.kv_layout} sched={args.scheduler} "
+          f"{chunk}"
           f"served={stats['completed']} decode_steps={stats['decode_steps']} "
           f"iterations={stats['iterations']} "
           f"rows/step={stats['fused_rows'] / max(stats['decode_steps'], 1):.2f} "

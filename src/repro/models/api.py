@@ -99,13 +99,16 @@ def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
 
     ``pos`` is a scalar, a per-row ``(B,)`` vector — ragged decode:
     every batch row at its own position in one call — or a per-(row,
-    query) ``(B, T)`` matrix when ``token`` is a (B, T) speculative
-    draft window (the head then applies to the NEXT-token hidden state,
-    position 0; use ``kernels.ops.verify_draft`` on
-    ``lm.decode_step``'s full (B, T, D) output to verify drafts).  With
-    ``block_tables`` the cache's linear K/V leaves are block-paged
-    pools: the step scatters the new row(s) into their pool blocks and
-    attention reads the pool through the table — no dense gather.
+    query) ``(B, T)`` matrix when ``token`` is a (B, T) window: a
+    speculative draft window (the head then applies to the NEXT-token
+    hidden state, position 0; use ``kernels.ops.verify_draft`` on
+    ``lm.decode_step``'s full (B, T, D) output to verify drafts) or a
+    prefill CHUNK of consecutive prompt positions (the serving engine's
+    chunked admission — it gathers the LAST hidden column itself and
+    discards mid-prompt logits).  With ``block_tables`` the cache's
+    linear K/V leaves are block-paged pools: the step scatters the new
+    row(s) into their pool blocks and attention reads the pool through
+    the table — no dense gather.
     """
     s = _as_sampler(head_mode, cfg)
     h, new_cache = lm.decode_step(params, cfg, token, cache, pos,
@@ -118,12 +121,21 @@ def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
 def serve_prefill_paged(params, cfg: ModelConfig, batch: dict,
                         cache_len: int, head_mode="reduced", *,
                         pools, blocks: jax.Array, paged_mask):
-    """Paged-native prompt pass (B = 1): prefill at the block-aligned
-    ``cache_len`` and scatter the paged K/V leaves straight into the
-    SHARED pool blocks, all inside one jitted call — the dense prefill
-    cache never round-trips through the host (the old path returned the
-    full cache, which the store then re-read, re-blocked and scattered
-    a second time).
+    """One-shot paged-native prompt pass (B = 1): prefill at the
+    block-aligned ``cache_len`` and scatter the paged K/V leaves
+    straight into the SHARED pool blocks, all inside one jitted call —
+    the dense prefill cache never round-trips through the host (the old
+    path returned the full cache, which the store then re-read,
+    re-blocked and scattered a second time).
+
+    This is the LEGACY admission path: the fused scheduler with
+    ``chunk_size`` set serves prompts through ``lm.decode_step``'s
+    (B, T) paged branch instead — ``chunk_size`` tokens per engine
+    iteration beside the decode rows, no separate prefill call.
+    One-shot remains the path for the cohort scheduler, dense layouts,
+    and configs with non-paged cache leaves (ring buffers, recurrent
+    state), and the byte-identity oracle chunked output is tested
+    against.
 
     ``pools``: the store's pool list (None where a leaf is dense);
     ``blocks``: (nb,) int32 pool blocks freshly allocated for this slot;

@@ -184,15 +184,20 @@ def attention(
     byte-for-byte (and supports T > 1 in the linear branch).
 
     ``cache_pos`` may also be a ``(B, T)`` matrix — MULTI-TOKEN ragged
-    decode, the speculative-decoding step: row ``b``'s query ``t`` (its
-    last committed token at t = 0, drafts after) writes its K/V at
-    ``cache_pos[b, t]`` and masks ``kv_pos <= cache_pos[b, t]``, so one
-    forward verifies a whole draft window per row.  Rows narrower than T
-    repeat their last real (token, position) pair: the duplicate query
-    recomputes the identical K/V row into the identical cache cell, so
-    padding is a no-op.  Supported by the paged and linear branches
-    (sliding-window ring buffers and recurrent state cannot rewind a
-    rejected draft, so speculation never reaches them).
+    decode: row ``b``'s query ``t`` writes its K/V at ``cache_pos[b, t]``
+    and masks ``kv_pos <= cache_pos[b, t]``.  Two callers ride this one
+    branch: the speculative-decoding step (last committed token at
+    t = 0, drafts after — one forward verifies a whole draft window per
+    row) and the CHUNKED-PREFILL step (consecutive prompt positions —
+    the ascending-position mask is exactly within-chunk causal attention
+    plus full visibility of earlier chunks already in the cache).  Rows
+    narrower than T repeat their last real (token, position) pair: the
+    duplicate query recomputes the identical K/V row into the identical
+    cache cell, so padding is a no-op and decode rows, draft windows and
+    prefill chunks mix in one call.  Supported by the paged and linear
+    branches (sliding-window ring buffers and recurrent state cannot
+    rewind a rejected draft or grow chunk-by-chunk, so speculation and
+    chunking never reach them).
     """
     dt = x.dtype
     B, T, _ = x.shape

@@ -522,15 +522,18 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
                 pos: jax.Array, *, block_tables=None):
-    """One decode step. token: (B, T) int32 (T = 1 for plain decode,
+    """One decode step. token: (B, T) int32 (T = 1 for plain decode;
     T = K + 1 for a speculative draft window: the row's last committed
-    token followed by its K drafts); pos: int32 position(s) of
-    ``token`` — a scalar, a per-row ``(B,)`` vector for RAGGED decode
-    (every row at its own position; the serving engine fuses all active
-    slots into one such call), or a per-(row, query) ``(B, T)`` matrix
-    for the speculative step.  Returns (last_hidden, new_caches) where
-    last_hidden is (B, D) for T == 1 (unchanged contract) and (B, T, D)
-    for a multi-token step (one verification point per position).
+    token followed by its K drafts; T = chunk width for a CHUNKED
+    PREFILL row: consecutive prompt tokens served inside the fused
+    step); pos: int32 position(s) of ``token`` — a scalar, a per-row
+    ``(B,)`` vector for RAGGED decode (every row at its own position;
+    the serving engine fuses all active slots into one such call), or a
+    per-(row, query) ``(B, T)`` matrix for any multi-token step.
+    Returns (last_hidden, new_caches) where last_hidden is (B, D) for
+    T == 1 (unchanged contract) and (B, T, D) for a multi-token step
+    (one verification point per position; a chunked-prefill caller
+    keeps only the last column).
 
     ``block_tables`` (B, nb) int32 switches linear-attention cache
     leaves to the block-paged pool layout: the step scatters each new

@@ -148,13 +148,22 @@ class LLM:
                     f"[{int(prompt.min())}, {int(prompt.max())}]")
             # a prompt the pool could never cover would reach the queue
             # head and MemoryError the engine (killing a background
-            # pump); a long-lived frontend rejects it at submit instead
-            if not self.engine.store.can_ever_admit(len(prompt)):
+            # pump); a long-lived frontend rejects it at submit instead.
+            # The bound is chunk-aware: chunked admission allocates
+            # incrementally, so only the final residency must fit — a
+            # long-but-servable prompt is not rejected at the door just
+            # because its one-shot cover-plus-decode-block would not
+            # fit in one allocation.
+            if not self.engine.store.can_ever_admit(
+                    len(prompt), self.engine.chunk_size):
                 store = self.engine.store
                 raise ValueError(
                     f"prompt of {len(prompt)} tokens can never be "
                     f"admitted: KV pool is {store.allocator.num_blocks} "
-                    f"x {store.block_size}-token blocks")
+                    f"x {store.block_size}-token blocks"
+                    + ("" if self.engine.chunk_size is not None else
+                       " (one-shot admission; a chunk_size= engine "
+                       "admits up to one block more)"))
             req = Request(next(self._rids), prompt, params=params)
             self.engine.submit(req)
             return req
@@ -259,7 +268,10 @@ class LLM:
     # -- introspection -------------------------------------------------------
     @property
     def stats(self) -> dict:
-        return dict(self.engine.stats)
+        """Engine counters plus scheduler state: the raw ``engine.stats``
+        dict extended with queue depth, active slots and TTFT
+        percentiles (``engine.snapshot()``) — what GET /v1/stats serves."""
+        return self.engine.snapshot()
 
     def kv_usage(self) -> dict:
         return self.engine.store.usage()

@@ -28,6 +28,30 @@ The inference-accelerator story of the paper, at engine level:
     requests into free slots (subject to block availability; an
     exhausted pool defers admission or preempts the youngest slot back
     to the queue);
+  - prefill is CHUNKED on request (``chunk_size=C``): admission stops
+    being a separate jitted call — a pending prompt is scattered into
+    its pool blocks ``C`` tokens at a time as PREFILL-CHUNK ROWS inside
+    the same fused ragged step that serves the decode rows, riding the
+    (B, T) per-(row, query) position plumbing speculation added.  A
+    chunk's logits are never materialized (the trunk just writes K/V;
+    no head reads it) except for the FINAL chunk, whose last position
+    feeds the row's sampler head and emits the request's first token —
+    so one long prompt no longer head-of-line-blocks every decoding
+    slot behind a monolithic prefill call, and the engine has exactly
+    ONE jitted callable per iteration regardless of admission state.
+    ``token_budget`` caps the real tokens (decode + draft + chunk) a
+    single iteration may carry: chunk widths shrink to fit, every
+    prefilling slot keeps >= 1 token of progress, and blocks allocate
+    incrementally per chunk (``store.ensure_capacity``) instead of
+    whole-prompt upfront.  Admissions are packed by LENGTH BUCKET
+    (pow-2 first-chunk width, bounded lookahead past the queue head —
+    the tensor2tensor bucketing-by-length idiom) so a mixed-length
+    admission burst does not widen the step for everyone; the queue
+    HEAD is always offered first, so FIFO admission stays
+    starvation-free.  Chunked == one-shot token-exactly: a chunk row
+    recomputes the same K/V into the same pool cells and the final
+    chunk's hidden state equals the one-shot prefill's last position
+    (asserted by tests/test_serve_chunked.py);
   - sampling is a ``Sampler`` object (serve/sampler.py): ``Greedy`` IS
     the reduced softmax unit (fused comparator — argmax over ``h @ W``
     with the (B, V) logits never materialized; no exp, no normalizing
@@ -128,15 +152,21 @@ def _jitted_step(cfg: ModelConfig, samplers: tuple, treedef,
     call.  ``rows`` (per-group row-index vectors, pow-2 padded) are
     traced operands, so WHICH rows belong to which head never retraces.
 
-    ``spec_pallas is not None`` marks a SPECULATIVE step: ``toks`` is
-    (B, T) with T = 1 + max draft width, ``positions`` a (B, T) matrix,
-    and the speculating rows form one extra group verified by the
-    comparator bank (``ops.verify_draft`` over their (Bs, T, D) hidden
-    states against ``spec_cand``, -1-padded draft ids) — the group's
-    output is ``(ids (Bs, T), accept (Bs,))``, appended after the
-    sampler groups.  Non-speculating rows ride along at width 1 (their
-    padding queries repeat their last (token, position), a cache no-op)
-    and their heads read position 0 of the shared hidden state.
+    A MULTI-TOKEN step (``toks`` (B, T > 1), ``positions`` a (B, T)
+    matrix) carries any mix of window widths: speculative draft
+    windows, prefill chunks, and width-1 decode rows riding along
+    (their padding queries repeat their last (token, position), a cache
+    no-op).  Head groups gather each row's hidden state at the LAST
+    padded position — for a width-w window the padding repeats position
+    w-1, so the last column IS the window's final real query (the
+    next-token hidden for decode rows, the prompt's last position for a
+    final prefill chunk); rows in no group (mid-prefill chunks, whose
+    logits are never read) only scatter their K/V.  ``spec_pallas is
+    not None`` additionally marks the speculating rows as one extra
+    group verified by the comparator bank (``ops.verify_draft`` over
+    their (Bs, T, D) hidden states against ``spec_cand``, -1-padded
+    draft ids) — the group's output is ``(ids (Bs, T), accept (Bs,))``,
+    appended after the sampler groups.
     """
 
     def step(params, toks, pools, denses, btab, positions, rows,
@@ -146,18 +176,18 @@ def _jitted_step(cfg: ModelConfig, samplers: tuple, treedef,
         cache = jax.tree.unflatten(treedef, leaves)
         h, new_cache = lm.decode_step(params, cfg, toks, cache, positions,
                                       block_tables=btab)
+        # (B, D): each row's hidden at its window's last real query —
+        # padding repeats the last (token, position), so column -1 is
+        # identical to column w-1 for every width-w window.
+        hl = h[:, -1] if h.ndim == 3 else h
+        outs = tuple(s.head(params, cfg, hl[r])
+                     for s, r in zip(samplers, rows))
         if spec_pallas is not None:
             from repro.kernels import ops as kernel_ops
 
-            h0 = h[:, 0]                      # (B, D): next-token hidden
-            outs = tuple(s.head(params, cfg, h0[r])
-                         for s, r in zip(samplers, rows))
             w = sampler_mod._head_weight(params, cfg)
             outs = outs + (kernel_ops.verify_draft(
                 h[spec_rows], w, spec_cand, use_pallas=spec_pallas),)
-        else:
-            outs = tuple(s.head(params, cfg, h[r])
-                         for s, r in zip(samplers, rows))
         new_pools, new_denses = [], []
         for m, leaf in zip(paged_mask, jax.tree.flatten(new_cache)[0]):
             new_pools.append(leaf if m else None)
@@ -223,7 +253,8 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_per_step: Optional[int] = None,
                  scheduler: str = "fused", mesh=None, seed: int = 0,
-                 drafter=None):
+                 drafter=None, chunk_size: Optional[int] = None,
+                 token_budget: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -267,6 +298,32 @@ class ServeEngine:
         self.store = PagedKVStore(
             params, cfg, n_slots=n_slots, max_len=max_len,
             block_size=block_size, num_blocks=num_blocks, layout=kv_layout)
+        # chunked prefill rides the same multi-token fused step as
+        # speculation (repeated-padding windows, position-masked pool
+        # scatters), so it carries the same capability gate — plus a
+        # paged store (chunks allocate blocks incrementally) and the
+        # fused scheduler (the cohort baseline has no multi-token
+        # step).  Incapable configs fall back to one-shot admission.
+        if chunk_size is not None and chunk_size < 1:
+            raise ValueError(f"chunk_size={chunk_size}: must be >= 1 "
+                             "(or None for one-shot prefill)")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget={token_budget}: must be >= 1 "
+                             "(or None for unlimited)")
+        self.chunk_capable = (self.spec_capable and self.store.any_paged
+                              and scheduler == "fused")
+        if chunk_size is not None and not self.chunk_capable:
+            warnings.warn(
+                f"chunk_size={chunk_size} ignored: chunked prefill needs "
+                "pure linear-attention decode, a paged KV layout and "
+                "scheduler='fused'; falling back to one-shot admission",
+                stacklevel=2)
+            chunk_size = None
+        self.chunk_size = chunk_size
+        self.token_budget = token_budget
+        # bounded lookahead past the queue head for length-bucketed
+        # admission packing (chunked only; 1 = strict FIFO).
+        self.pack_lookahead = 8
         # decode_steps counts JITTED decode calls; iterations counts
         # engine loop turns — the fused scheduler's contract is
         # decode_steps == iterations (one call whatever the position /
@@ -275,10 +332,16 @@ class ServeEngine:
         # drafted/accepted count speculative draft tokens proposed /
         # verified-accepted by the comparator; acceptance_rate is their
         # running ratio (the spec-decode health metric).
-        self.stats = {"prefills": 0, "decode_steps": 0, "iterations": 0,
-                      "fused_rows": 0, "completed": 0, "deferred": 0,
-                      "preemptions": 0, "cancelled": 0,
+        # prefill_chunks counts chunk rows served by the fused step
+        # (chunked admission only); prefills still counts COMPLETED
+        # prompt prefills — one-shot calls, or final chunks.
+        self.stats = {"prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
+                      "iterations": 0, "fused_rows": 0, "completed": 0,
+                      "deferred": 0, "preemptions": 0, "cancelled": 0,
                       "drafted": 0, "accepted": 0, "acceptance_rate": 0.0}
+        # per-request TTFT samples (ms, submit -> first token), feeding
+        # the percentile columns of ``snapshot()`` / GET /v1/stats.
+        self._ttft_ms: List[float] = []
         # per-token event consumers: every emitted token — prefill head
         # or fused decode step — is delivered as a TokenChunk, with
         # finish_reason set on a request's final chunk.  The LLM facade
@@ -295,6 +358,21 @@ class ServeEngine:
     @property
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def snapshot(self) -> dict:
+        """The counters plus derived scheduler state (JSON-ready): queue
+        depth, active slots, and TTFT percentiles over every first token
+        emitted so far — what ``LLM.stats`` and GET /v1/stats serve."""
+        s = dict(self.stats)
+        s["queue_depth"] = len(self.queue)
+        s["active_slots"] = sum(sl is not None for sl in self.slots)
+        if self._ttft_ms:
+            t = np.asarray(self._ttft_ms)
+            s["ttft_ms_p50"] = float(np.percentile(t, 50))
+            s["ttft_ms_p99"] = float(np.percentile(t, 99))
+        else:
+            s["ttft_ms_p50"] = s["ttft_ms_p99"] = None
+        return s
 
     # -- queue management ----------------------------------------------------
     def submit(self, req: Request):
@@ -393,6 +471,14 @@ class ServeEngine:
     def _free_slots(self):
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    def _prefilling(self, i: int) -> bool:
+        """Whether slot ``i`` is mid-chunked-prefill: its write cursor
+        (``slot_pos``) has not yet covered its prompt.  One-shot
+        admission scatters the whole prompt before the slot is visible,
+        so this is only ever True under ``chunk_size``."""
+        req = self.slots[i]
+        return req is not None and int(self.slot_pos[i]) < len(req.prompt)
+
     def _admit(self):
         """Prefill queued requests into free slots (continuous batching).
 
@@ -404,7 +490,14 @@ class ServeEngine:
         starvation-free.  Paged stores admit natively: blocks are
         allocated first and the jitted prefill scatters the prompt K/V
         straight into them.
+
+        Under ``chunk_size`` admission only ASSIGNS the slot (and
+        reserves the first chunk's blocks) — the prompt is scattered
+        chunk-by-chunk by the fused step itself (``_plan_chunks`` /
+        ``_decode_rows``), so no separate jitted prefill call ever runs.
         """
+        if self.chunk_size is not None:
+            return self._admit_chunked()
         budget = self.prefill_per_step
         for i in self._free_slots():
             if not self.queue or budget == 0:
@@ -442,6 +535,55 @@ class ServeEngine:
             if budget is not None:
                 budget -= 1
 
+    def _admit_chunked(self):
+        """Chunked admission: assign free slots and reserve each
+        request's FIRST chunk cover; the fused step scatters the chunks.
+
+        The queue HEAD is always offered first — deferral stops there,
+        so the FIFO starvation-freedom of one-shot admission carries
+        over unchanged.  Admissions AFTER the head within one iteration
+        are packed by LENGTH BUCKET (t2t bucketing-by-length): a
+        bounded lookahead (``pack_lookahead``) prefers the first
+        admissible queued request whose pow-2 first-chunk width matches
+        the bucket this iteration is already paying for, so one short
+        prompt admitted beside a long one does not widen T for every
+        row.  A skipped request keeps (or reaches) the head position
+        and is admitted next iteration at the latest.
+        """
+        budget = self.prefill_per_step
+        bucket = None
+        for i in self._free_slots():
+            if not self.queue or budget == 0:
+                break
+            if not self.store.can_admit(len(self.queue[0].prompt),
+                                        self.chunk_size):
+                self.stats["deferred"] += 1
+                break
+            pick = 0
+            if bucket is not None:
+                for j in range(min(self.pack_lookahead, len(self.queue))):
+                    cand = self.queue[j]
+                    if (_pow2(min(self.chunk_size, len(cand.prompt)))
+                            == bucket
+                            and self.store.can_admit(len(cand.prompt),
+                                                     self.chunk_size)):
+                        pick = j
+                        break
+            req = self.queue[pick]
+            del self.queue[pick]
+            if req.t_admit is None:       # re-prefill keeps the first stamp
+                req.t_admit = time.perf_counter()
+            first = min(self.chunk_size, len(req.prompt))
+            bucket = _pow2(first)
+            # reserve the first chunk's cover NOW so this iteration's
+            # later can_admit checks see the honest free count
+            self.store.ensure_capacity(i, first - 1)
+            self.slots[i] = req
+            self.slot_pos[i] = 0          # write cursor: nothing scattered
+            self.admit_order.append(i)
+            if budget is not None:
+                budget -= 1
+
     def _preempt_youngest(self, keep: int) -> bool:
         """Pool exhausted mid-decode: push the most recently admitted slot
         (except ``keep``) back to the queue, freeing its blocks.  The
@@ -467,15 +609,17 @@ class ServeEngine:
 
     # -- main loop ------------------------------------------------------------
     def step(self):
-        """One engine iteration: admit, then ONE fused ragged decode step
-        over every active slot (``scheduler='cohort'`` partitions by
-        (position, head) first — the PR 2 baseline)."""
+        """One engine iteration: admit, then ONE fused ragged step over
+        every active slot — decode rows, speculative windows and
+        prefill-chunk rows in the same jitted call
+        (``scheduler='cohort'`` partitions by (position, head) first —
+        the PR 2 baseline)."""
         self.stats["iterations"] += 1
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             if self.queue and not self.store.can_admit(
-                    len(self.queue[0].prompt)):
+                    len(self.queue[0].prompt), self.chunk_size):
                 # nothing is running, so every block is free — if the head
                 # request still doesn't fit it never will: fail loudly
                 # instead of spinning to max_iters with served=0.
@@ -514,7 +658,7 @@ class ServeEngine:
         neighbour, it just drafts less."""
         req = self.slots[i]
         k = req.params.spec_k
-        if k <= 0 or self.scheduler != "fused":
+        if k <= 0 or self.scheduler != "fused" or self._prefilling(i):
             return []
         pos = int(self.slot_pos[i])
         # a draft window writes K/V at pos..pos+k and can emit up to
@@ -537,6 +681,40 @@ class ServeEngine:
             return []             # lost a race with another slot's growth
         return drafts
 
+    def _plan_chunks(self, rows: List[int], n_decode_tokens: int) -> dict:
+        """Plan this iteration's prefill-chunk windows: ``{slot: (start,
+        width)}`` for every mid-prefill slot in ``rows``.
+
+        Width = min(chunk_size, remaining prompt), then shrunk to the
+        per-iteration ``token_budget`` (decode rows are always served;
+        the budget throttles chunk width only) and to the free block
+        pool (``can_grow`` — a chunk narrows rather than preempt a
+        neighbour, exactly like a draft window).  Oldest-admitted slots
+        plan first and every prefilling slot keeps >= 1 token, so
+        head-of-line prefill progress is monotone whatever the budget.
+        """
+        chunks: dict = {}
+        pre = [i for i in rows if self._prefilling(i)]
+        if not pre:
+            return chunks
+        recency = {slot: n for n, slot in enumerate(self.admit_order)}
+        pre.sort(key=lambda j: recency.get(j, 0))
+        avail = None
+        if self.token_budget is not None:
+            avail = max(self.token_budget - n_decode_tokens, len(pre))
+        for n, i in enumerate(pre):
+            start = int(self.slot_pos[i])
+            w = min(self.chunk_size, len(self.slots[i].prompt) - start)
+            if avail is not None:
+                later = len(pre) - n - 1       # reserve 1 token each
+                w = max(1, min(w, avail - later))
+                avail -= w
+            while w > 1 and not self.store.can_grow(i, start + w - 1):
+                w -= 1
+            self.store.ensure_capacity(i, start + w - 1)
+            chunks[i] = (start, w)
+        return chunks
+
     def _decode_rows(self, rows: List[int]):
         """One fused jitted decode call over the given slot rows — ragged
         positions, mixed samplers, per-row draft widths.
@@ -551,12 +729,18 @@ class ServeEngine:
         partition the padded rows; their pow-2-padded row-index vectors
         are traced operands of the ONE jitted call.
 
-        Rows with draft tokens this step (``_propose``) widen the call
-        to T = pow2(1 + max draft width): each such row carries its last
-        token plus its drafts at consecutive positions and joins the
-        COMPARATOR-VERIFY group (``ops.verify_draft`` inside the same
-        jitted call); every other row rides along at width 1, padding
-        queries repeating its last (token, position) — a cache no-op.
+        Rows with draft tokens this step (``_propose``) or a pending
+        prefill chunk (``_plan_chunks``) widen the call to T = pow2(max
+        window width): a draft row carries its last token plus drafts
+        at consecutive positions and joins the COMPARATOR-VERIFY group
+        (``ops.verify_draft`` inside the same jitted call); a CHUNK row
+        carries the next ``chunk_size`` prompt tokens at their absolute
+        positions, attends over its earlier chunks through the block
+        table (same in-window causal rule: kv_pos <= pos[b, t]) and
+        joins NO head group until its FINAL chunk, whose last position
+        feeds the row's sampler head and emits the request's first
+        token; every other row rides along at width 1, padding queries
+        repeating its last (token, position) — a cache no-op.
         The verified rows then emit their whole accepted run (plus the
         comparator's correction token) host-side, token by token, so
         stop/eos/length/consumer semantics are IDENTICAL to
@@ -566,7 +750,11 @@ class ServeEngine:
         """
         n_real = len(rows)
         drafts = {i: self._propose(i) for i in rows}
-        width = 1 + max(len(drafts[i]) for i in rows)
+        n_decode_tokens = sum(1 + len(drafts[i]) for i in rows
+                              if not self._prefilling(i))
+        chunks = self._plan_chunks(rows, n_decode_tokens)
+        width = max([1 + len(drafts[i]) for i in rows]
+                    + [w for _, w in chunks.values()])
         T = _pow2(width)
         padded = rows + [rows[0]] * (_pow2(n_real) - n_real)
         groups: Dict[Sampler, list] = {}
@@ -574,11 +762,19 @@ class ServeEngine:
         spec_modes = set()
         where = []                       # row r -> (its group, offset)
         for r, i in enumerate(padded):
-            if T > 1 and drafts[i]:
+            ch = chunks.get(i)
+            if ch is not None and ch[0] + ch[1] < len(self.slots[i].prompt):
+                # mid-prefill chunk: scatters K/V only — its logits are
+                # never materialized, so it joins NO head group.
+                where.append((None, None))
+            elif T > 1 and drafts[i]:
                 where.append((None, len(spec_group)))
                 spec_group.append(r)
                 spec_modes.add(self.slots[i].sampler.head_mode)
             else:
+                # decode rows AND final prefill chunks: the row's head
+                # reads its window's last real position (the padding
+                # convention makes that the last padded column).
                 dev = self.slots[i].sampler.device_form()
                 lst = groups.setdefault(dev, [])
                 where.append((dev, len(lst)))
@@ -592,9 +788,19 @@ class ServeEngine:
         toks = np.zeros((len(padded), T), np.int32)
         posm = np.zeros((len(padded), T), np.int32)
         for r, i in enumerate(padded):
-            win = [self.slots[i].generated[-1]] + drafts[i]
-            base = int(self.slot_pos[i])
-            w = len(win)
+            ch = chunks.get(i)
+            if ch is not None:
+                # prefill chunk: the next `w` prompt tokens at their
+                # absolute positions — history (earlier chunks) is
+                # visible through the block table, the in-window causal
+                # mask is the same kv_pos <= pos[b, t] rule.
+                base, w = ch
+                win = [int(t) for t in
+                       self.slots[i].prompt[base:base + w]]
+            else:
+                win = [self.slots[i].generated[-1]] + drafts[i]
+                base = int(self.slot_pos[i])
+                w = len(win)
             toks[r, :w] = win
             toks[r, w:] = win[-1]        # repeat last (token, position):
             posm[r, :w] = base + np.arange(w)
@@ -623,10 +829,13 @@ class ServeEngine:
                     jnp.asarray(posm), row_sets, spec_rows_op,
                     spec_cand_op)
             else:
+                # (B,) positions at T == 1 (the pure-decode fast path,
+                # same compiled shapes as ever); (B, T) whenever any
+                # window — draft or chunk — widens the step.
                 outs, new_pools, new_denses = fn(
                     self.params, jnp.asarray(toks), self.store.pools,
                     denses, None if btab is None else jnp.asarray(btab),
-                    jnp.asarray(posm[:, 0]), row_sets)
+                    jnp.asarray(posm if T > 1 else posm[:, 0]), row_sets)
         self.stats["decode_steps"] += 1
         self.stats["fused_rows"] += n_real
         self.store.write_back(
@@ -639,6 +848,18 @@ class ServeEngine:
             i = padded[r]
             dev, off = where[r]
             req = self.slots[i]
+            if i in chunks:
+                # prefill chunk served: advance the write cursor over
+                # it.  A FINAL chunk is the moment one-shot admission
+                # called "prefill done": the head output at the
+                # prompt's last position emits the first token.
+                start, w = chunks[i]
+                self.slot_pos[i] = start + w
+                self.stats["prefill_chunks"] += 1
+                if start + w == len(req.prompt):
+                    self.stats["prefills"] += 1
+                    self._emit(i, req, host[dev], off)
+                continue
             if dev is None:
                 # speculative row: the comparator verified the whole
                 # draft window — emit the accepted run plus the
@@ -705,6 +926,7 @@ class ServeEngine:
         req.generated.append(tok)
         if req.t_first is None:
             req.t_first = time.perf_counter()
+            self._ttft_ms.append((req.t_first - req.t_submit) * 1e3)
         # stop-sequence matching at emission time, against the generated
         # tail — a sequence whose prefix landed in an earlier step
         # completes here for free (partial matches span step boundaries)

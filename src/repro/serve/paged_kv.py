@@ -18,6 +18,12 @@ blocks drawn from one shared pool:
     when drafts are rejected (``rewind``: surplus whole blocks straight
     back to the free list; the stale rows behind the position masks are
     simply overwritten later);
+  - CHUNKED prefill allocates incrementally: admission reserves only the
+    first chunk's cover (``can_admit(S, chunk_size)``) and each later
+    chunk extends the slot's table by its own cover
+    (``ensure_capacity`` again), so the door check
+    (``can_ever_admit(S, chunk_size)``) needs only the final residency
+    ``blocks_for(S + 1)`` — not the one-shot cover-plus-decode-block;
   - non-linear cache state is NOT paged: sliding-window ring buffers are
     already O(window), recurrent (RG-LRU / RWKV) state is O(1), and
     cross-attention K/V is read-only — those stay dense per-slot.
@@ -159,24 +165,49 @@ class PagedKVStore:
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size) if self.any_paged else 0
 
-    def _blocks_needed(self, prompt_len: int) -> int:
-        """Admission cost: the prompt's block cover plus one decode
-        block, capped at a slot's worst case — the ONE accounting rule
-        shared by free-now and could-ever admission checks."""
+    def _blocks_needed(self, prompt_len: int,
+                       chunk_size: Optional[int] = None) -> int:
+        """Admission cost, capped at a slot's worst case — the ONE
+        accounting rule shared by free-now and could-ever admission
+        checks.
+
+        One-shot (``chunk_size=None``): the whole prompt's block cover
+        plus one decode block, all allocated up front.  Chunked: only
+        the FIRST chunk's cover — later chunks (and the decode block)
+        allocate incrementally as the scheduler serves them."""
+        if chunk_size is not None:
+            return min(self.blocks_for(min(prompt_len, chunk_size)),
+                       self.max_blocks_per_slot)
         return min(self.blocks_for(prompt_len) + 1, self.max_blocks_per_slot)
 
-    def can_admit(self, prompt_len: int) -> bool:
-        """Enough free blocks for the prompt plus one decode block."""
+    def can_admit(self, prompt_len: int,
+                  chunk_size: Optional[int] = None) -> bool:
+        """Enough free blocks to START serving the prompt now: its full
+        cover plus one decode block one-shot, or just the first chunk's
+        cover under chunked admission."""
         if not self.any_paged:
             return True
-        return self.allocator.n_free >= self._blocks_needed(prompt_len)
+        return self.allocator.n_free >= self._blocks_needed(prompt_len,
+                                                            chunk_size)
 
-    def can_ever_admit(self, prompt_len: int) -> bool:
-        """Whether the prompt could be admitted with EVERY block free —
+    def can_ever_admit(self, prompt_len: int,
+                       chunk_size: Optional[int] = None) -> bool:
+        """Whether the prompt could be SERVED with EVERY block free —
         False means the engine would MemoryError once it reaches the
-        queue head; long-lived frontends reject at submit instead."""
+        queue head; long-lived frontends reject at submit instead.
+
+        One-shot admission needs the whole cover plus a decode block in
+        one allocation.  Chunked admission allocates incrementally, so
+        the bound is only the final residency — the cover of the prompt
+        plus its first decode write (``blocks_for(prompt_len + 1)``),
+        one block less than one-shot whenever the prompt is not
+        block-aligned.  Attention still reads ALL prior positions, so
+        chunking relaxes the allocation granularity, never the peak."""
         if not self.any_paged:
             return True
+        if chunk_size is not None:
+            return self.allocator.num_blocks >= min(
+                self.blocks_for(prompt_len + 1), self.max_blocks_per_slot)
         return self.allocator.num_blocks >= self._blocks_needed(prompt_len)
 
     def prefill_len(self, prompt_len: int) -> int:

@@ -21,10 +21,12 @@ Endpoints:
                         TokenChunk as the engine emits it, terminated by
                         ``data: [DONE]``.
 
-  GET /v1/stats             engine counters (prefills, decode_steps,
-                            iterations, fused_rows, completed,
-                            deferred, preemptions, drafted, accepted,
-                            acceptance_rate) + KV-pool usage.
+  GET /v1/stats             engine counters (prefills, prefill_chunks,
+                            decode_steps, iterations, fused_rows,
+                            completed, deferred, preemptions, drafted,
+                            accepted, acceptance_rate) + scheduler
+                            state (queue_depth, active_slots,
+                            ttft_ms_p50/p99) + KV-pool usage.
 
   GET /healthz              liveness: 200 {"ok": true, ...} while the
                             engine pump thread is healthy, 503 once it
