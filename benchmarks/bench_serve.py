@@ -8,7 +8,11 @@ repetitive text: tok/s and acceptance rate vs spec_k, output asserted
 token-identical to non-speculative greedy and the softmax baseline) and
 the CHUNKED-ADMISSION sweep (heavy-tailed Zipf prompt lengths: TTFT/ITL
 p50/p99 for chunked vs all-at-once prefill, identity asserted per
-point).
+point) and the MULTI-STEP sweep (``host_stride`` ∈ {1, 2, 4, 8, 16}
+device-resident decode on the ragged mixed-sampler trace with
+stop/eos/length/cancel paths live: tok/s, host dispatches per token and
+ITL percentiles, generations asserted bit-identical to host_stride=1 at
+every point).
 
 For each n_slots the same request trace (mixed short/medium/long prompts)
 is served by:
@@ -466,6 +470,152 @@ def chunked_sweep(arch="qwen3-0.6b", n_requests=32, max_new=8, n_slots=4,
                 / min(r["itl_ms_p99"] for r in rows))
 
 
+def multistep_sweep(arch="qwen3-0.6b", strides=(1, 2, 4, 8, 16),
+                    n_requests=12, max_new=48, n_slots=4, max_len=128,
+                    reps=2, verbose=True):
+    """Device-resident multi-step decode A/B: ``host_stride`` sweep on
+    the ragged mixed-sampler trace (staggered prompt lengths, greedy
+    comparator / top-k bus / Gumbel-max rows side by side).
+
+    At stride K the engine runs up to K fused comparator iterations per
+    host dispatch inside one jitted ``lax.while_loop`` — sampling on
+    device with per-request PRNG keys — so host dispatches per emitted
+    token should fall ~1/K (diluted only by prefills, which stay one
+    dispatch each).  Every finish path is live on the trace: a
+    probe-derived STOP sequence on request 0 (host-checked at stride
+    granularity, overrun trimmed + KV rewound), a probe-derived EOS
+    token on request 1 (detected inside the device loop), a consumer
+    CANCEL of request 2 at its third token, and plain max_new_tokens
+    LENGTH everywhere else.  Generations and finish reasons are
+    asserted bit-identical to the ``host_stride=1`` reference at every
+    sweep point — the device loop changes dispatch count, never output
+    — and the headline asserts >= 4x fewer dispatches/token at stride 8.
+    Reported per point: tok/s, host_syncs, dispatches/token and ITL
+    p50/p99 at the consumer (tokens drain in bursts at large K: p50
+    collapses, p99 tracks the dispatch wall — the latency shape a
+    streaming client trades for throughput).
+    """
+    from repro.serve.params import SamplingParams
+    from repro.serve.sampler import Greedy, Temperature, TopK
+
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    plens = [3 + (7 * i) % 53 for i in range(n_requests)]   # staggered
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    mixers = [Greedy(), TopK(4, temperature=0.8), Temperature(0.7)]
+
+    def serve(stride, *, stop=(), eos_id=-1, cancel_rid=None):
+        def once():
+            eng = ServeEngine(params, cfg, n_slots=n_slots,
+                              max_len=max_len, eos_id=eos_id,
+                              kv_layout="paged", host_stride=stride)
+            reqs = [Request(i, p.copy(),
+                            sampler=mixers[i % len(mixers)],
+                            params=SamplingParams(
+                                max_new_tokens=max_new, seed=1000 + i,
+                                stop=stop if i == 0 else ()))
+                    for i, p in enumerate(prompts)]
+            emit_t = {}
+
+            def consume(c):
+                emit_t.setdefault(c.rid, []).append(time.perf_counter())
+                # deterministic mid-stream disconnect: fires inside
+                # _emit_token during the drain, so at stride > 1 the
+                # engine must trim the rest of the block + free the KV
+                if c.rid == cancel_rid and c.index == 2:
+                    eng.cancel(reqs[cancel_rid])
+
+            eng.add_consumer(consume)
+            for r in reqs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            stats = eng.run(max_iters=10000)
+            wall = time.perf_counter() - t0
+            itls = []
+            for ts in emit_t.values():
+                itls += [(b - a) * 1e3 for a, b in zip(ts, ts[1:])]
+            toks = sum(len(r.generated) for r in reqs)
+            return dict(wall=wall, tok_s=toks / wall, tokens=toks,
+                        host_syncs=int(stats["host_syncs"]),
+                        emitted_tokens=int(stats["emitted_tokens"]),
+                        dispatches_per_token=stats["host_syncs"]
+                        / max(stats["emitted_tokens"], 1),
+                        tokens_per_dispatch=stats["emitted_tokens"]
+                        / max(stats["host_syncs"], 1),
+                        decode_steps=int(stats["decode_steps"]),
+                        iterations=int(stats["iterations"]),
+                        itl_ms_p50=float(np.percentile(itls, 50)),
+                        itl_ms_p99=float(np.percentile(itls, 99)),
+                        gens=[list(r.generated) for r in reqs],
+                        reasons=[r.finish_reason for r in reqs])
+        once()                                  # warmup: compile
+        runs = [once() for _ in range(reps)]
+        out = runs[0]
+        for r in runs[1:]:                      # identical schedule ->
+            assert r["gens"] == out["gens"]     # identical tokens
+            for k, v in r.items():              # keep per-metric minima
+                if isinstance(v, float) and v < out[k]:
+                    out[k] = v
+        return out
+
+    # probe at stride 1 with every finisher disabled, then derive the
+    # stop sequence and eos token FROM the generations so both paths are
+    # guaranteed to fire mid-stream (request 0 stops after 5 tokens,
+    # request 1 hits eos at its first probe[1][j>=6] occurrence) without
+    # colliding with request 0's pre-stop tokens or request 2's
+    # pre-cancel tokens
+    probe = serve(1)
+    g0, g1, g2 = probe["gens"][0], probe["gens"][1], probe["gens"][2]
+    stop = tuple(int(t) for t in g0[3:5])
+    eos_tok = next((int(t) for t in g1[6:]
+                    if t not in g1[:6] and t not in g0[:5]
+                    and t not in g2[:3] and t not in stop),
+                   int(g1[6]))
+    ref = serve(1, stop=stop, eos_id=eos_tok, cancel_rid=2)
+    assert {"stop", "eos", "cancelled", "length"} <= set(ref["reasons"]), \
+        f"trace no longer exercises every finish path: {ref['reasons']}"
+    rows = []
+    for s in strides:
+        r = dict(ref) if s == 1 else serve(s, stop=stop, eos_id=eos_tok,
+                                           cancel_rid=2)
+        # the acceptance identity: the device loop changes how many
+        # iterations ride one dispatch, never which tokens come out —
+        # including the stop-overrun trim, eos, length and cancel rows
+        assert r["gens"] == ref["gens"], \
+            f"host_stride={s}: generations != host_stride=1 reference"
+        assert r["reasons"] == ref["reasons"], \
+            f"host_stride={s}: finish reasons != host_stride=1 reference"
+        r.pop("gens")
+        r.pop("reasons")
+        r["host_stride"] = s
+        rows.append(r)
+        if verbose:
+            print(f"host_stride={s:2d}  {r['tok_s']:7.1f} tok/s  "
+                  f"{r['host_syncs']:4d} host_syncs  "
+                  f"{r['dispatches_per_token']:.3f} dispatches/tok  "
+                  f"{r['tokens_per_dispatch']:5.2f} tok/dispatch | "
+                  f"ITL p50 {r['itl_ms_p50']:6.2f} ms  "
+                  f"p99 {r['itl_ms_p99']:6.2f} ms")
+    by = {r["host_stride"]: r for r in rows}
+    reduction = None
+    if 1 in by and 8 in by:
+        reduction = (by[1]["dispatches_per_token"]
+                     / by[8]["dispatches_per_token"])
+        # the acceptance floor: ISSUE 7 asks >= 4x fewer host
+        # dispatches/token at stride 8 on this trace
+        assert reduction >= 4.0, \
+            f"stride 8 cut dispatches/token only {reduction:.2f}x (< 4x)"
+    if verbose and reduction is not None:
+        print(f"host dispatches/token at stride 8: {reduction:.2f}x fewer "
+              f"than stride 1 (outputs bit-identical at every point)")
+    return dict(n_requests=n_requests, n_slots=n_slots, max_new=max_new,
+                prompt_lens=plens, stop=[int(t) for t in stop],
+                eos_id=int(eos_tok), cancel_rid=2, rows=rows,
+                dispatch_reduction_at_8=reduction)
+
+
 def streaming_latency(arch="qwen3-0.6b", n_requests=8, max_new=12,
                       n_slots=4, max_len=96, verbose=True):
     """Streaming metrics through the LLM facade: per-request TTFT
@@ -533,6 +683,11 @@ def main():
                     help="chunk_size sweep points for the chunked-vs-"
                          "one-shot admission TTFT/ITL columns on the "
                          "heavy-tailed trace")
+    ap.add_argument("--strides", type=int, nargs="+",
+                    default=[1, 2, 4, 8, 16],
+                    help="host_stride sweep points for the device-"
+                         "resident multi-step decode columns (include 1 "
+                         "and 8 for the dispatch-reduction headline)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     rows = run(arch=args.arch, slot_counts=tuple(args.slots),
@@ -557,6 +712,11 @@ def main():
     jax.clear_caches()
     chunked = chunked_sweep(arch=args.arch,
                             chunk_sizes=tuple(args.chunk_sizes))
+    print("\ndevice-resident multi-step decode (host_stride sweep, "
+          "ragged mixed-sampler trace):")
+    jax.clear_caches()
+    multistep = multistep_sweep(arch=args.arch,
+                                strides=tuple(args.strides))
     print("\nstreaming TTFT / inter-token latency (LLM facade):")
     streaming = streaming_latency(arch=args.arch,
                                   n_requests=args.requests,
@@ -572,6 +732,7 @@ def main():
         json.dump({"arch": args.arch, "backend": jax.default_backend(),
                    "slot_sweep": rows, "ragged_sweep": ragged,
                    "spec_sweep": spec, "chunked_sweep": chunked,
+                   "multistep_sweep": multistep,
                    "streaming": streaming,
                    "latency_vs_max_len": sweep},
                   f, indent=2)

@@ -71,8 +71,22 @@ assert spec["token_ids"] == full["token_ids"], \
 stats = json.load(open(f"{tmp}/stats.json"))["engine"]
 assert stats["decode_steps"] == stats["iterations"], stats
 assert stats["accepted"] > 0 and stats["acceptance_rate"] > 0, stats
+# the dispatch-amortization counters (host_stride lives on these) are
+# present and consistent on every engine: host_syncs counts every
+# jitted dispatch, so on this non-chunked server it is exactly
+# prefills + decode calls, and tokens_per_dispatch their ratio
+assert stats["host_syncs"] == stats["prefills"] + stats["decode_steps"], \
+    stats
+assert stats["host_syncs"] >= stats["iterations"], stats
+assert stats["emitted_tokens"] > 0, stats
+tpd = stats["tokens_per_dispatch"]
+assert tpd > 0, stats
+assert abs(tpd - stats["emitted_tokens"] / stats["host_syncs"]) < 1e-9, \
+    stats
 print(f"HTTP SMOKE OK: {len(streamed)} streamed tokens == non-streamed, "
       f"reduced == softmax == speculative, healthz ok, 404s JSON, "
       f"decode_steps == iterations ({stats['decode_steps']}), "
+      f"host_syncs == prefills + decode_steps ({stats['host_syncs']}, "
+      f"{tpd:.2f} tok/dispatch), "
       f"acceptance {stats['acceptance_rate']:.2f}")
 EOF

@@ -135,6 +135,84 @@ print(f"CHUNKED SMOKE OK: {stats['prefill_chunks']} prefill chunks over "
       "streamed == non-streamed")
 EOF
 
+echo "== multi-step decode smoke (host_stride: K fused iterations per"
+echo "   jitted dispatch; stride 8 == stride 1 bit-identical incl."
+echo "   stop/eos; >= 4 tokens per host dispatch) =="
+timeout 240 python - <<'EOF'
+import jax, numpy as np
+from repro.configs import ARCHS, smoke_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.params import SamplingParams
+from repro.serve.sampler import Greedy, Temperature, TopK
+
+cfg = smoke_config(ARCHS["qwen3-0.6b"])
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(5)
+plens = [3, 10, 17, 24, 31, 38]         # staggered, mixed samplers
+prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+           for n in plens]
+mixers = [Greedy(), TopK(4, temperature=0.8), Temperature(0.7)]
+
+def serve(stride, stop=(), eos_id=-1):
+    eng = ServeEngine(params, cfg, n_slots=3, max_len=96, eos_id=eos_id,
+                      host_stride=stride)
+    reqs = [Request(i, p.copy(), params=SamplingParams(
+                max_new_tokens=16, seed=100 + i,
+                stop=stop if i == 0 else ()),
+            sampler=mixers[i % 3]) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return ([r.generated for r in reqs],
+            [r.finish_reason for r in reqs], eng.snapshot())
+
+# probe, then stop/eos tokens drawn FROM the generations so both finish
+# paths fire mid-stream at every stride
+probe, _, _ = serve(1)
+stop = tuple(probe[0][3:5])
+eos = next(t for t in probe[1][6:]
+           if t not in probe[0][:5] and t not in probe[1][:6]
+           and t not in stop)
+g1, r1, s1 = serve(1, stop=[stop], eos_id=eos)
+g8, r8, s8 = serve(8, stop=[stop], eos_id=eos)
+assert g8 == g1, "host_stride=8 != host_stride=1 generations"
+assert r8 == r1, (r8, r1)
+assert "stop" in r8 and "eos" in r8, r8
+assert s8["tokens_per_dispatch"] >= 4.0, s8["tokens_per_dispatch"]
+assert s8["host_syncs"] < s1["host_syncs"], (s8, s1)
+print(f"MULTISTEP SMOKE OK: {s8['tokens_per_dispatch']:.1f} tok/dispatch "
+      f"at stride 8 ({s8['host_syncs']} vs {s1['host_syncs']} host_syncs "
+      "at stride 1), outputs identical incl. stop/eos")
+EOF
+
+echo "== BENCH_serve.json schema guard (multistep amortization floor) =="
+python - <<'EOF'
+import json, os, sys
+path = "BENCH_serve.json"
+if not os.path.exists(path):
+    print("BENCH GUARD SKIPPED: no BENCH_serve.json in tree")
+    sys.exit(0)
+bench = json.load(open(path))
+ms = bench.get("multistep_sweep")
+if not ms:
+    print("BENCH GUARD SKIPPED: no multistep_sweep section (regenerate "
+          "with benchmarks/bench_serve.py)")
+    sys.exit(0)
+rows = {r["host_stride"]: r for r in ms["rows"]}
+assert 8 in rows, f"multistep_sweep missing stride 8: {sorted(rows)}"
+r8 = rows[8]
+for k in ("tok_s", "host_syncs", "dispatches_per_token",
+          "tokens_per_dispatch", "itl_ms_p50", "itl_ms_p99"):
+    assert k in r8, f"multistep_sweep stride-8 row missing {k!r}"
+floor = 8 * 0.5
+assert r8["tokens_per_dispatch"] >= floor, (
+    f"stride-8 amortization regressed: {r8['tokens_per_dispatch']:.2f} "
+    f"tokens/dispatch < host_stride*0.5 = {floor}")
+print(f"BENCH GUARD OK: stride-8 tokens_per_dispatch = "
+      f"{r8['tokens_per_dispatch']:.2f} >= {floor}")
+EOF
+
 echo "== HTTP smoke (SSE frontend: streamed == non-streamed, reduced =="
 echo "   softmax over the wire, healthz, stats contract) =="
 timeout 300 bash scripts/http_smoke.sh

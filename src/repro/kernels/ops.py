@@ -20,6 +20,17 @@ interpreter fallback on TPU for callers who flipped ``use_pallas`` only.
 ``softmax_xent`` is differentiable (custom_vjp): forward avoids
 materializing probabilities; backward recomputes ``softmax - onehot``
 blockwise from the saved logits instead of storing probs as residuals.
+
+LOOP SAFETY: every entry here dispatches at TRACE TIME only — flag
+resolution (``resolve_flags``, including the ``jax.default_backend()``
+probe) is plain Python executed while tracing, and no op ever calls
+back to the host (no ``io_callback``/``pure_callback``/``debug`` sync).
+Each op is therefore closed under ``lax.while_loop``/``lax.scan``
+bodies: the device-resident multi-step decode loop
+(``api.serve_decode_multi``) traces the paged-attention kernel and the
+comparator heads straight into its loop body and runs K iterations
+with zero host involvement.  Keep it that way — a host callback inside
+any of these ops would silently serialize the decode loop.
 """
 from __future__ import annotations
 

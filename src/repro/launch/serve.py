@@ -5,7 +5,7 @@
       [--head-mode reduced|softmax|fused|sharded|temperature] \
       [--kv-layout paged|dense] [--top-k 4 --temperature 0.8] \
       [--spec-k 4] [--chunk-size 16 [--token-budget 64]] \
-      [--serve-http 8000]
+      [--host-stride 8] [--serve-http 8000]
 
 ``--serve-http PORT`` swaps the batch run for the network frontend
 (serve/server.py): an SSE ``POST /v1/completions`` + ``GET /v1/stats``
@@ -82,6 +82,13 @@ def main():
                          "chunk widths) per fused iteration; chunk "
                          "widths shrink to fit, decode rows are always "
                          "served (requires --chunk-size)")
+    ap.add_argument("--host-stride", type=int, default=None,
+                    help=">=1: device-resident decode — run up to K "
+                         "fused iterations per host dispatch inside one "
+                         "jitted lax.while_loop (sampling on device with "
+                         "per-request PRNG keys; outputs identical "
+                         "across strides); mutually exclusive with "
+                         "--spec-k")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
                     help="instead of the batch run: start the SSE HTTP "
@@ -112,6 +119,7 @@ def main():
                   num_blocks=args.num_blocks, scheduler=args.scheduler,
                   chunk_size=args.chunk_size,
                   token_budget=args.token_budget,
+                  host_stride=args.host_stride,
                   mesh=mesh, seed=args.seed)
         serve_forever(llm, host=args.http_host, port=args.serve_http)
         return
@@ -121,6 +129,7 @@ def main():
                       num_blocks=args.num_blocks, scheduler=args.scheduler,
                       chunk_size=args.chunk_size,
                       token_budget=args.token_budget,
+                      host_stride=args.host_stride,
                       mesh=mesh, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -148,8 +157,12 @@ def main():
             if args.spec_k else "")
     chunk = (f"prefill_chunks={stats['prefill_chunks']} "
              if eng.chunk_size is not None else "")
+    snap = eng.snapshot()
+    stride = (f"host_syncs={stats['host_syncs']} "
+              f"tok/dispatch={snap['tokens_per_dispatch']:.2f} "
+              if eng.host_stride is not None else "")
     print(f"sampler={sampler} kv={args.kv_layout} sched={args.scheduler} "
-          f"{chunk}"
+          f"{chunk}{stride}"
           f"served={stats['completed']} decode_steps={stats['decode_steps']} "
           f"iterations={stats['iterations']} "
           f"rows/step={stats['fused_rows'] / max(stats['decode_steps'], 1):.2f} "

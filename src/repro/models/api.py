@@ -118,6 +118,80 @@ def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache,
     return s.head(params, cfg, h), new_cache
 
 
+def serve_decode_multi(params, cfg: ModelConfig, token: jax.Array, cache,
+                       pos: jax.Array, keys: jax.Array,
+                       emit_caps: jax.Array, row_sets, *, steps: int,
+                       eos_id: int, samplers,
+                       block_tables: Optional[jax.Array] = None):
+    """Device-resident multi-step decode: up to ``steps`` fused
+    iterations inside ONE ``lax.while_loop`` — trunk forward, K/V
+    scatter, comparator/sampler head and the feed-back of the sampled
+    token all stay on device; the host sees nothing until the loop
+    exits.  This is the ``host_stride`` engine's dispatch unit: one
+    host round-trip amortized over up to ``steps`` tokens.
+
+    The loop carry is ``(step, tokens (B,), positions (B,), cache,
+    keys (B, 2), emitted (B,), halted (B,), out (B, steps))``.  Each
+    iteration runs ``lm.decode_step`` at T=1 over ALL rows (inactive
+    rows repeat their last (token, position) — the repeat-last padding
+    convention makes the K/V rewrite idempotent, which is why this
+    path requires pure-attention stacks), samples the next token per
+    sampler group via ``Sampler.sample_device`` with per-row PRNG keys
+    split once per EMITTED token, and early-exits when every row is
+    done.  Device-side stop conditions per row:
+
+      * ``emit_caps[b]`` tokens emitted — the engine folds the per-row
+        ``max_new_tokens`` remainder, the ``max_len`` ceiling and the
+        slot's block-table capacity into this one cap;
+      * the sampled token equals ``eos_id`` (the eos token itself IS
+        emitted, then the row halts; pass ``eos_id=-1`` to disable);
+
+    Stop SEQUENCES are not matched here — the engine drains ``out``
+    through its per-token emission path and trims at the match (a
+    bounded lag of at most ``steps - 1`` extra tokens, KV rewound via
+    ``PagedKVStore.rewind``).
+
+    ``samplers`` / ``row_sets``: per-group full samplers (static; the
+    jit key — temperature lives ON DEVICE here, unlike the legacy
+    step's ``device_form()`` grouping) and their pow2-padded traced
+    row-index sets.  Returns ``(out (B, steps) int32 with -1 padding,
+    emitted (B,) int32, new_keys (B, 2), new_cache)``.
+    """
+    i32 = jnp.int32
+    B = token.shape[0]
+
+    def cond(c):
+        step, _, _, _, _, emitted, halted, _ = c
+        return (step < steps) & jnp.any(~halted & (emitted < emit_caps))
+
+    def body(c):
+        step, tok, p, cch, ks, emitted, halted, out = c
+        active = ~halted & (emitted < emit_caps)
+        h, new_cch = lm.decode_step(params, cfg, tok[:, None], cch, p,
+                                    block_tables=block_tables)
+        split = jax.vmap(jax.random.split)(ks)
+        next_keys, use_keys = split[:, 0], split[:, 1]
+        sampled = tok
+        for s, rows in zip(samplers, row_sets):
+            ids = s.sample_device(params, cfg, h[rows], use_keys[rows])
+            sampled = sampled.at[rows].set(ids.astype(i32))
+        new_tok = jnp.where(active, sampled, tok)
+        new_p = jnp.where(active, p + 1, p)
+        out = out.at[:, step].set(jnp.where(active, sampled, out[:, step]))
+        new_halted = halted | (active & (sampled == eos_id))
+        new_emitted = emitted + active.astype(i32)
+        new_ks = jnp.where(active[:, None], next_keys, ks)
+        return (step + 1, new_tok, new_p, new_cch, new_ks,
+                new_emitted, new_halted, out)
+
+    init = (jnp.asarray(0, i32), token.astype(i32), pos.astype(i32),
+            cache, keys, jnp.zeros((B,), i32),
+            jnp.zeros((B,), jnp.bool_), jnp.full((B, steps), -1, i32))
+    (_, _, _, new_cache, new_keys, emitted, _, out) = jax.lax.while_loop(
+        cond, body, init)
+    return out, emitted, new_keys, new_cache
+
+
 def serve_prefill_paged(params, cfg: ModelConfig, batch: dict,
                         cache_len: int, head_mode="reduced", *,
                         pools, blocks: jax.Array, paged_mask):

@@ -198,6 +198,17 @@ def attention(
     branches (sliding-window ring buffers and recurrent state cannot
     rewind a rejected draft or grow chunk-by-chunk, so speculation and
     chunking never reach them).
+
+    The same idempotent-rewrite property is what lets the DEVICE-
+    RESIDENT decode loop (``api.serve_decode_multi``) carry this layer
+    inside ``lax.while_loop``: rows that have halted (eos, emit cap)
+    simply repeat their last (token, position) each remaining iteration
+    — every branch here is pure traced jax (scatter + masked attention,
+    no host callbacks), so the whole stack is closed under the loop and
+    a halted row's re-scatter lands the identical value on the
+    identical cell.  Ring buffers and recurrent state are excluded for
+    the same reason as above: their cache update is not idempotent
+    under a repeated (token, position).
     """
     dt = x.dtype
     B, T, _ = x.shape

@@ -539,6 +539,12 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
     leaves to the block-paged pool layout: the step scatters each new
     K/V row into its pool block and attends through the table — decode
     cost scales with the sequence's real length, never ``max_len``.
+
+    This function is CLOSED UNDER ``lax.while_loop``: the cache tree
+    rides a loop carry unchanged in structure/shape, positions advance
+    as traced values, and no branch calls back to the host — which is
+    how ``api.serve_decode_multi`` runs K of these steps per host
+    dispatch, feeding each sampled token back in on device.
     """
     params = cast_params(params, cfg)
     x = embed_tokens(params, cfg, token)

@@ -54,9 +54,13 @@ class LLM:
     """Facade over ``ServeEngine``: typed params in, typed outputs out.
 
     Constructor kwargs mirror the engine's (n_slots, max_len, eos_id,
-    head_mode, kv_layout, block_size, num_blocks, scheduler, mesh,
-    seed, ...); ``head_mode`` is the default head — each request's
-    ``SamplingParams.head_mode`` can override it.
+    head_mode, kv_layout, block_size, num_blocks, scheduler,
+    chunk_size, token_budget, host_stride, mesh, seed, ...);
+    ``head_mode`` is the default head — each request's
+    ``SamplingParams.head_mode`` can override it.  ``host_stride=K``
+    serves decode through the device-resident multi-step loop (K fused
+    iterations per host dispatch; outputs identical across strides —
+    see serve/engine.py).
     """
 
     def __init__(self, params, cfg, **engine_kwargs):

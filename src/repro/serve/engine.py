@@ -71,6 +71,31 @@ The inference-accelerator story of the paper, at engine level:
     stale pool rows invisible) and whole surplus blocks return to the
     free list (``store.rewind``).  Non-speculating rows ride along at
     width 1 in the same jitted call.
+  - decode is DEVICE-RESIDENT on request (``host_stride=K``): instead
+    of one host round-trip per token, each iteration dispatches ONE
+    jitted ``lax.while_loop`` (``api.serve_decode_multi``) that runs up
+    to K fused decode iterations entirely on device — trunk forward,
+    K/V scatter, sampler head and the feed-back of the sampled token —
+    and returns a (B, K) token block plus per-row emit counts.  Every
+    per-row stop condition the DEVICE can know (remaining
+    ``max_new_tokens``, the ``max_len`` ceiling, block-table capacity)
+    is folded into a per-row emit cap before dispatch; the eos id
+    halts a row inside the loop.  The host then DRAINS the block
+    through the ordinary per-token emission path, so stop SEQUENCES
+    become a bounded-lag host check: at most K-1 extra tokens are
+    generated past a match, trimmed before emission, their KV rewound
+    O(1) (``store.rewind``).  Sampling inside the loop is KEYED: each
+    request carries a JAX PRNG key split exactly once per emitted
+    token (``Sampler.sample_device`` / host mirror ``pick_keyed``), so
+    generations are bit-identical across every ``host_stride`` —
+    admission, preemption and chunked prefill synchronize at stride
+    boundaries (iterations with a mid-prefill slot fall back to the
+    legacy single fused step, still keyed).  ``spec_k`` is mutually
+    exclusive with ``host_stride`` (both amortize the same host
+    round-trip; composing them is future work), and stats grow
+    ``host_syncs`` (jitted dispatches) and ``emitted_tokens`` —
+    ``tokens_per_dispatch`` in ``snapshot()`` is the amortization
+    actually achieved.
 
 ``scheduler='cohort'`` keeps the PR 2 position-cohort scheduling (one
 fused call per (position, head) group) as the measurable baseline the
@@ -200,6 +225,42 @@ def _jitted_step(cfg: ModelConfig, samplers: tuple, treedef,
     return jax.jit(step, donate_argnums=(2,))
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_multistep(cfg: ModelConfig, samplers: tuple, treedef,
+                      paged_mask: tuple, steps: int, eos_id: int, mesh):
+    """The device-resident multi-step dispatch (``host_stride``): ONE
+    jitted call runs up to ``steps`` fused decode iterations inside a
+    ``lax.while_loop`` (``api.serve_decode_multi``) — the sampled token
+    feeds the next trunk step on device, the host only sees the final
+    (B, steps) token block.
+
+    Unlike ``_jitted_step``, the group key is the FULL sampler tuple
+    (not ``device_form()``): temperature and sample_k act ON DEVICE
+    here, inside ``Sampler.sample_device``.  ``steps`` and the engine's
+    ``eos_id`` are static — the loop body compiles once per (config,
+    sampler mix, batch bucket, table width, stride).
+    """
+
+    def run(params, toks, pools, denses, btab, positions, keys,
+            emit_caps, rows):
+        leaves = [pool if m else dense
+                  for m, pool, dense in zip(paged_mask, pools, denses)]
+        cache = jax.tree.unflatten(treedef, leaves)
+        out, emitted, new_keys, new_cache = api.serve_decode_multi(
+            params, cfg, toks, cache, positions, keys, emit_caps, rows,
+            steps=steps, eos_id=eos_id, samplers=samplers,
+            block_tables=btab)
+        new_pools, new_denses = [], []
+        for m, leaf in zip(paged_mask, jax.tree.flatten(new_cache)[0]):
+            new_pools.append(leaf if m else None)
+            new_denses.append(None if m else leaf)
+        return (out, emitted, new_keys), new_pools, new_denses
+
+    # pools donated for the same reason as _jitted_step: the while-loop
+    # carry aliases the pool scatter in place across all K iterations.
+    return jax.jit(run, donate_argnums=(2,))
+
+
 def _to_host(out):
     """Pull a sampler head output to host: one device->host sync per
     head group, tuple-structured outputs (the k-winner bus) leaf-wise."""
@@ -232,6 +293,13 @@ class Request:
     # regardless of scheduling (deferral, preemption), so sampled
     # generations are reproducible per request.
     rng: Optional[np.random.Generator] = None
+    # per-request JAX PRNG key (raw (2,) uint32), set at submit on
+    # host_stride engines only: split exactly once per EMITTED token
+    # (next_key, use_key = jax.random.split(key)) whether the token was
+    # sampled inside the device loop or by the host fallback — draw n
+    # is a pure function of (seed, n), so generations are identical
+    # across strides, batch composition and scheduling.
+    prng_key: Optional[np.ndarray] = None
     # explicit Sampler; None -> resolved at submit from params plus the
     # engine's default head_mode.
     sampler: Optional[Sampler] = None
@@ -254,7 +322,8 @@ class ServeEngine:
                  prefill_per_step: Optional[int] = None,
                  scheduler: str = "fused", mesh=None, seed: int = 0,
                  drafter=None, chunk_size: Optional[int] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 host_stride: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -321,6 +390,25 @@ class ServeEngine:
             chunk_size = None
         self.chunk_size = chunk_size
         self.token_budget = token_budget
+        # the device loop re-runs inactive rows with their last (token,
+        # position) — an idempotent K/V rewrite only for pure linear
+        # attention (ring buffers would double-write, recurrent state
+        # would re-advance), and only the fused scheduler has the
+        # grouped multi-sampler step body.  Incapable configs fall back
+        # to per-token dispatch, loudly.
+        if host_stride is not None and host_stride < 1:
+            raise ValueError(f"host_stride={host_stride}: must be >= 1 "
+                             "(or None for per-token host dispatch)")
+        self.multistep_capable = (self.spec_capable
+                                  and scheduler == "fused")
+        if host_stride is not None and not self.multistep_capable:
+            warnings.warn(
+                f"host_stride={host_stride} ignored: the device-resident "
+                "decode loop needs pure linear-attention decode and "
+                "scheduler='fused'; falling back to per-token dispatch",
+                stacklevel=2)
+            host_stride = None
+        self.host_stride = host_stride
         # bounded lookahead past the queue head for length-bucketed
         # admission packing (chunked only; 1 = strict FIFO).
         self.pack_lookahead = 8
@@ -335,10 +423,17 @@ class ServeEngine:
         # prefill_chunks counts chunk rows served by the fused step
         # (chunked admission only); prefills still counts COMPLETED
         # prompt prefills — one-shot calls, or final chunks.
+        # host_syncs counts JITTED host dispatches of any kind (one-shot
+        # prefills, fused steps, multi-step loop calls) — the per-token
+        # host constant host_stride amortizes; emitted_tokens counts
+        # tokens through _emit_token, so emitted_tokens / host_syncs
+        # (``tokens_per_dispatch`` in snapshot()) is the amortization
+        # actually achieved.
         self.stats = {"prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
                       "iterations": 0, "fused_rows": 0, "completed": 0,
                       "deferred": 0, "preemptions": 0, "cancelled": 0,
-                      "drafted": 0, "accepted": 0, "acceptance_rate": 0.0}
+                      "drafted": 0, "accepted": 0, "acceptance_rate": 0.0,
+                      "host_syncs": 0, "emitted_tokens": 0}
         # per-request TTFT samples (ms, submit -> first token), feeding
         # the percentile columns of ``snapshot()`` / GET /v1/stats.
         self._ttft_ms: List[float] = []
@@ -366,6 +461,8 @@ class ServeEngine:
         s = dict(self.stats)
         s["queue_depth"] = len(self.queue)
         s["active_slots"] = sum(sl is not None for sl in self.slots)
+        s["tokens_per_dispatch"] = (
+            s["emitted_tokens"] / max(s["host_syncs"], 1))
         if self._ttft_ms:
             t = np.asarray(self._ttft_ms)
             s["ttft_ms_p50"] = float(np.percentile(t, 50))
@@ -396,6 +493,38 @@ class ServeEngine:
             req.sampler.validate(self.cfg)
         if req.sampler.needs_mesh and self.mesh is None:
             raise ValueError(f"{req.sampler} requires an engine mesh=")
+        if self.host_stride is not None:
+            if req.params.spec_k > 0:
+                raise ValueError(
+                    f"spec_k={req.params.spec_k} and host_stride="
+                    f"{self.host_stride} are mutually exclusive: both "
+                    "amortize the per-token host round-trip and the "
+                    "device loop has no draft-verify group (composing "
+                    "them is future work)")
+            if req.params.n_candidates > 0:
+                raise ValueError(
+                    f"n_candidates={req.params.n_candidates} is not "
+                    "available on a host_stride engine: the device loop "
+                    "consumes the k-winner bus on device and ships only "
+                    "sampled token ids")
+            if req.sampler.needs_mesh:
+                raise ValueError(
+                    f"{req.sampler} cannot ride host_stride="
+                    f"{self.host_stride}: the sharded head needs an "
+                    "ambient mesh the device loop does not thread")
+            if type(req.sampler).sample_device is Sampler.sample_device:
+                raise ValueError(
+                    f"{req.sampler} has no device sampling form "
+                    "(Sampler.sample_device) and cannot ride a "
+                    "host_stride engine")
+            if req.prng_key is None:
+                # the keyed analogue of req.rng: params.seed pins the
+                # stream, (engine seed, rid) keeps requests distinct.
+                base = (jax.random.PRNGKey(req.params.seed)
+                        if req.params.seed is not None
+                        else jax.random.fold_in(
+                            jax.random.PRNGKey(self.seed), req.rid))
+                req.prng_key = np.asarray(base, np.uint32)
         if req.params.spec_k > 0:
             # params validated the sampling law; the ENGINE must also be
             # able to verify: comparator head, rewindable cache state,
@@ -528,6 +657,7 @@ class ServeEngine:
                     out, cache1 = fn(self.params, batch)
                     self.store.admit(i, jax.tree.flatten(cache1)[0], S)
             self.stats["prefills"] += 1
+            self.stats["host_syncs"] += 1
             self.slots[i] = req
             self.slot_pos[i] = S
             self.admit_order.append(i)
@@ -646,6 +776,15 @@ class ServeEngine:
                                  []).append(i)
             for key in sorted(parts):
                 self._decode_rows(parts[key])
+        elif (self.host_stride is not None
+              and not any(self._prefilling(i) for i in active)):
+            # the device-resident multi-step dispatch: one host sync
+            # for up to host_stride tokens per row.  Iterations with a
+            # mid-prefill slot fall back to the legacy single step (the
+            # loop has no chunk rows) — still keyed, so generations
+            # stay stride-invariant; admission/preemption above already
+            # synchronized at this stride boundary.
+            self._decode_multi(active)
         else:
             self._decode_rows(active)
         return True
@@ -837,6 +976,7 @@ class ServeEngine:
                     denses, None if btab is None else jnp.asarray(btab),
                     jnp.asarray(posm if T > 1 else posm[:, 0]), row_sets)
         self.stats["decode_steps"] += 1
+        self.stats["host_syncs"] += 1
         self.stats["fused_rows"] += n_real
         self.store.write_back(
             rows, new_pools,
@@ -888,6 +1028,109 @@ class ServeEngine:
             self.stats["acceptance_rate"] = (
                 self.stats["accepted"] / self.stats["drafted"])
 
+    def _decode_multi(self, rows: List[int]):
+        """One device-resident multi-step dispatch over the given slot
+        rows: up to ``host_stride`` fused iterations inside a single
+        jitted ``lax.while_loop``, then a host drain of the returned
+        (B, K) token block through the ordinary per-token emission path.
+
+        Every stop condition the device can evaluate is folded into a
+        per-row EMIT CAP before dispatch: the remaining
+        ``max_new_tokens``, the ``max_len - 1`` cache ceiling, and
+        block-table capacity (grown here up to the cap's last write,
+        shrinking the cap instead of preempting a neighbour — same
+        policy as draft/chunk windows).  The eos id halts a row inside
+        the loop (the eos token itself is emitted).  Stop SEQUENCES are
+        matched on the host during the drain: a match finishes the
+        request mid-block and the remaining tokens are TRIMMED — never
+        emitted, their KV invisible behind the position masks and their
+        surplus blocks rewound O(1).  That is the bounded-lag contract:
+        at most ``host_stride - 1`` tokens of wasted device work past a
+        stop, zero tokens of wasted emission.
+
+        Groups key on the FULL sampler (temperature acts on device via
+        ``sample_device``); per-row PRNG keys ride the loop carry and
+        the advanced keys are adopted afterwards, so draw n stays a
+        pure function of (request seed, n) whatever the stride.
+        """
+        K = self.host_stride
+        caps: Dict[int, int] = {}
+        for i in rows:
+            req = self.slots[i]
+            pos = int(self.slot_pos[i])
+            cap = max(1, min(K, req.max_new_tokens - len(req.generated),
+                             self.max_len - 1 - pos))
+            while cap > 1 and not self.store.can_grow(i, pos + cap - 1):
+                cap -= 1
+            if cap > 1 and not self.store.ensure_capacity(i, pos + cap - 1):
+                cap = 1           # lost a race; ``pos`` itself is covered
+            caps[i] = cap
+        n_real = len(rows)
+        padded = rows + [rows[0]] * (_pow2(n_real) - n_real)
+        groups: Dict[Sampler, list] = {}
+        for r, i in enumerate(padded):
+            groups.setdefault(self.slots[i].sampler, []).append(r)
+        order = sampler_mod.canonical_order(groups)
+        row_sets = tuple(
+            jnp.asarray(groups[s] + [groups[s][0]]
+                        * (_pow2(len(groups[s])) - len(groups[s])),
+                        jnp.int32)
+            for s in order)
+        toks = np.asarray([self.slots[i].generated[-1] for i in padded],
+                          np.int32)
+        pos_arr = np.asarray([int(self.slot_pos[i]) for i in padded],
+                             np.int32)
+        keys = np.stack([self.slots[i].prng_key for i in padded]
+                        ).astype(np.uint32)
+        emit_caps = np.zeros(len(padded), np.int32)
+        emit_caps[:n_real] = [caps[i] for i in rows]
+        # padding duplicates never emit (cap 0), but their block table
+        # still covers their (frozen) write position via the real row's.
+        last_write = pos_arr + np.asarray([caps[i] for i in padded],
+                                          np.int32) - 1
+        btab = self.store.block_table(padded, last_write)
+        denses = self.store.dense_sub(padded)
+        fn = _jitted_multistep(
+            self.cfg, tuple(order), self.store.treedef,
+            tuple(self.store.paged_mask), K,
+            -1 if self.eos_id is None else int(self.eos_id), self.mesh)
+        with env.use_mesh(self.mesh):
+            (out, emitted, new_keys), new_pools, new_denses = fn(
+                self.params, jnp.asarray(toks), self.store.pools, denses,
+                None if btab is None else jnp.asarray(btab),
+                jnp.asarray(pos_arr), jnp.asarray(keys),
+                jnp.asarray(emit_caps), row_sets)
+        self.stats["decode_steps"] += 1
+        self.stats["host_syncs"] += 1
+        self.stats["fused_rows"] += n_real
+        self.store.write_back(
+            rows, new_pools,
+            [None if d is None else d[:, :n_real] for d in new_denses])
+        out_h = np.asarray(out)
+        emitted_h = np.asarray(emitted)
+        keys_h = np.asarray(new_keys)
+        for r in range(n_real):
+            i = padded[r]
+            req = self.slots[i]
+            if req is None:
+                # a consumer cancelled this slot while an earlier row
+                # drained: its undrained tokens are simply dropped (the
+                # blocks already went back to the free list).
+                continue
+            req.prng_key = keys_h[r].copy()
+            for tok in out_h[r, :int(emitted_h[r])]:
+                self.slot_pos[i] += 1
+                self._emit_token(i, req, int(tok))
+                if req.done:
+                    # stop/eos/length/cancel fired mid-block: trim the
+                    # rest of the drained block (bounded-lag contract)
+                    break
+            if not req.done:
+                # surplus cover past the (possibly shrunk) cursor back
+                # to the free list — cheap, and keeps the invariant
+                # that a live slot covers exactly its next write.
+                self.store.rewind(i, int(self.slot_pos[i]))
+
     def _ensure_blocks(self, i: int, pos: int) -> bool:
         """Grow slot i's block table to cover ``pos``; preempt the
         youngest other slot if the pool is dry."""
@@ -909,8 +1152,17 @@ class ServeEngine:
     def _emit(self, i: int, req: Request, host_out, off: int):
         """One token emission off a sampler head output: pick on the
         host (plus the optional candidate bus), then the shared
-        emission path."""
-        tok = req.sampler.pick(host_out, off, req.rng)
+        emission path.  On a host_stride engine the pick is KEYED —
+        the same jax ops ``sample_device`` runs in the device loop,
+        consuming one split of the request's key — so tokens emitted
+        by this fallback (prefill heads, chunked-prefill iterations)
+        are bit-identical to what the device loop would have sampled."""
+        if self.host_stride is not None:
+            nk, uk = jax.random.split(jnp.asarray(req.prng_key))
+            tok = req.sampler.pick_keyed(host_out, off, uk)
+            req.prng_key = np.asarray(nk, np.uint32)
+        else:
+            tok = req.sampler.pick(host_out, off, req.rng)
         cands = None
         if self._consumers and req.params.n_candidates:
             c = req.sampler.candidate_ids(host_out, off)
@@ -924,6 +1176,7 @@ class ServeEngine:
         completion check, then deliver a TokenChunk to every consumer
         (with finish_reason set when this token finished the request)."""
         req.generated.append(tok)
+        self.stats["emitted_tokens"] += 1
         if req.t_first is None:
             req.t_first = time.perf_counter()
             self._ttft_ms.append((req.t_first - req.t_submit) * 1e3)

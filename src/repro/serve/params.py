@@ -40,6 +40,16 @@ caller attaches to a request — and the single thing
                     'reduced'/'fused' head and n_candidates == 0: the
                     verification IS the comparator, and faking it under
                     the softmax baseline would poison every A/B claim).
+                    Mutually exclusive with an engine's ``host_stride``
+                    (enforced at ``engine.submit``, since only the
+                    engine knows its stride): both amortize the same
+                    per-token host round-trip, and the device loop has
+                    no draft-verify group.  On a host_stride engine,
+                    ``seed`` pins the per-request JAX PRNG key instead
+                    of a numpy stream — still one draw per emitted
+                    token, identical across strides; ``n_candidates``
+                    is rejected there (the k-winner bus is consumed on
+                    device).
 
 Frozen + hashable on purpose: params ride into jit-cache keys via the
 resolved Sampler, and a shared default instance is safe.

@@ -41,6 +41,32 @@ The paper mapping:
 ``resolve()`` is the ONE remaining string switch: it maps the legacy
 ``head_mode`` / ``top_k`` / ``temperature`` triple (CLI flags, old call
 sites) onto a Sampler and validates it against the config.
+
+Multi-step decode (``host_stride``) adds a second, keyed pair:
+
+  sample_device(params, cfg, h, keys)
+                         device-side: (R, D) hidden rows + (R, 2)
+                         raw uint32 PRNG keys -> (R,) sampled token
+                         ids, entirely on device.  This is what runs
+                         inside the ``lax.while_loop`` of
+                         ``serve_decode_multi`` — the sampled id feeds
+                         straight back into the next trunk step with
+                         no host round-trip.
+  pick_keyed(out, row, key)
+                         host-side mirror of ``sample_device`` over a
+                         shipped head output: SAME jax ops on the SAME
+                         values, so a token sampled on the host (the
+                         engine's legacy fused step, used while chunked
+                         prefill is in flight) is bit-identical to the
+                         one the device loop would have sampled from
+                         the same key.
+
+Keyed draws are a pure function of (request key, emitted-token index):
+the engine splits the per-request key exactly once per EMITTED token
+(``next_key, use_key = jax.random.split(key)``), so generations are
+independent of host stride, batch composition and scheduling.  The
+numpy ``pick`` path is untouched — engines without ``host_stride``
+keep their historical RNG streams.
 """
 from __future__ import annotations
 
@@ -77,6 +103,25 @@ class Sampler:
     def pick(self, out, row: int, rng=None) -> int:
         """Host-side: head output row -> token id."""
         raise NotImplementedError
+
+    def sample_device(self, params, cfg: ModelConfig, h: jax.Array,
+                      keys: jax.Array) -> jax.Array:
+        """Device-side: (R, D) hidden rows + (R, 2) raw uint32 PRNG
+        keys -> (R,) int32 token ids.  Traced inside the multi-step
+        decode ``lax.while_loop``; deterministic samplers ignore
+        ``keys``.  Samplers that don't implement this cannot ride a
+        ``host_stride`` engine (rejected at submit)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no device sampling form; "
+            "it cannot be used with host_stride")
+
+    def pick_keyed(self, out, row: int, key) -> int:
+        """Host-side mirror of ``sample_device`` over a shipped head
+        output: the same jax ops on the same values, so host and
+        device draws from one key agree bit-for-bit."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no keyed host sampling form; "
+            "it cannot be used with host_stride")
 
     def candidate_ids(self, out, row: int):
         """Host-side: ranked candidate token ids for this row, or None
@@ -142,6 +187,14 @@ class Greedy(Sampler):
     def pick(self, out, row: int, rng=None) -> int:
         return int(out[row])
 
+    def sample_device(self, params, cfg: ModelConfig, h: jax.Array,
+                      keys: jax.Array) -> jax.Array:
+        # Deterministic: the comparator output IS the sample.
+        return self.head(params, cfg, h)
+
+    def pick_keyed(self, out, row: int, key) -> int:
+        return int(out[row])
+
 
 @dataclasses.dataclass(frozen=True)
 class SoftmaxBaseline(Sampler):
@@ -154,6 +207,13 @@ class SoftmaxBaseline(Sampler):
         return jnp.argmax(probs, axis=-1).astype(jnp.int32)
 
     def pick(self, out, row: int, rng=None) -> int:
+        return int(out[row])
+
+    def sample_device(self, params, cfg: ModelConfig, h: jax.Array,
+                      keys: jax.Array) -> jax.Array:
+        return self.head(params, cfg, h)
+
+    def pick_keyed(self, out, row: int, key) -> int:
         return int(out[row])
 
 
@@ -214,6 +274,29 @@ class TopK(Sampler):
         p /= p.sum()
         return int(rng.choice(idxs, p=p))
 
+    def sample_device(self, params, cfg: ModelConfig, h: jax.Array,
+                      keys: jax.Array) -> jax.Array:
+        vals, idxs = self.head(params, cfg, h)
+        n = self.k if self.sample_k is None else self.sample_k
+        if self.temperature <= 0.0 or n == 1:
+            return idxs[:, 0].astype(jnp.int32)
+        z = (vals[:, :n] / self.temperature).astype(jnp.float32)
+        choice = jax.vmap(jax.random.categorical)(keys, z)
+        return jnp.take_along_axis(
+            idxs, choice[:, None].astype(jnp.int32), axis=1)[:, 0].astype(
+                jnp.int32)
+
+    def pick_keyed(self, out, row: int, key) -> int:
+        vals, idxs = out
+        n = self.k if self.sample_k is None else self.sample_k
+        idxs = np.asarray(idxs[row])
+        if self.temperature <= 0.0 or n == 1:
+            return int(idxs[0])
+        z = (jnp.asarray(np.asarray(vals[row], np.float32)[:n])
+             / self.temperature).astype(jnp.float32)
+        c = int(jax.random.categorical(jnp.asarray(key), z))
+        return int(idxs[c])
+
     def candidate_ids(self, out, row: int):
         return np.asarray(out[1][row])
 
@@ -245,6 +328,23 @@ class Temperature(Sampler):
             return int(np.argmax(logits))
         g = rng.gumbel(size=logits.shape)
         return int(np.argmax(logits / self.temperature + g))
+
+    def sample_device(self, params, cfg: ModelConfig, h: jax.Array,
+                      keys: jax.Array) -> jax.Array:
+        logits = self.head(params, cfg, h)
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # jax.random.categorical IS the Gumbel-max trick — still a
+        # comparator decision, zero exp/sum/divide in the sample.
+        z = logits / self.temperature
+        return jax.vmap(jax.random.categorical)(keys, z).astype(jnp.int32)
+
+    def pick_keyed(self, out, row: int, key) -> int:
+        logits = np.asarray(out[row], np.float32)
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits))
+        z = jnp.asarray(logits) / self.temperature
+        return int(jax.random.categorical(jnp.asarray(key), z))
 
 
 def canonical_order(samplers) -> list:

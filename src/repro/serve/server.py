@@ -24,9 +24,12 @@ Endpoints:
   GET /v1/stats             engine counters (prefills, prefill_chunks,
                             decode_steps, iterations, fused_rows,
                             completed, deferred, preemptions, drafted,
-                            accepted, acceptance_rate) + scheduler
-                            state (queue_depth, active_slots,
-                            ttft_ms_p50/p99) + KV-pool usage.
+                            accepted, acceptance_rate, host_syncs,
+                            emitted_tokens) + scheduler state
+                            (queue_depth, active_slots, ttft_ms_p50/p99,
+                            tokens_per_dispatch — emitted tokens per
+                            jitted host dispatch, the host_stride
+                            amortization metric) + KV-pool usage.
 
   GET /healthz              liveness: 200 {"ok": true, ...} while the
                             engine pump thread is healthy, 503 once it

@@ -352,16 +352,20 @@ def test_http_server_roundtrip():
 # ---------------------------------------------------------------------------
 # engine.cancel KV hygiene
 # ---------------------------------------------------------------------------
-def test_cancel_mid_stream_frees_blocks_and_admits_queued():
+@pytest.mark.parametrize("host_stride", [None, 4])
+def test_cancel_mid_stream_frees_blocks_and_admits_queued(host_stride):
     """Cancelling a streaming request mid-generation must return its
     slot's blocks to the free list immediately — and a request that was
     DEFERRED on the exhausted pool must then admit into the freed space
-    and finish normally."""
+    and finish normally.  Parametrized over the device-resident decode
+    loop: at ``host_stride=4`` the cancel lands mid-drain of a
+    multi-token block, so the engine must also discard the rest of the
+    hog's device-generated block on the way out."""
     cfg, params = _mk()
     # 2 slots but a pool the hog occupies ENTIRELY: the waiter sees a
     # free slot yet defers on blocks until the cancel frees them
     llm = LLM(params, cfg, n_slots=2, max_len=64, eos_id=-1,
-              block_size=8, num_blocks=3)
+              block_size=8, num_blocks=3, host_stride=host_stride)
     hog_prompt = np.arange(2, 18, dtype=np.int32) % cfg.vocab_size  # 16 tok
     waiter_prompt = np.arange(3, 11, dtype=np.int32) % cfg.vocab_size
     it = llm.stream(hog_prompt, SamplingParams(max_new_tokens=40))
@@ -370,9 +374,12 @@ def test_cancel_mid_stream_frees_blocks_and_admits_queued():
     baseline = llm.kv_usage()
     assert baseline["blocks_free"] == 0            # the hog owns the pool
     waiter = llm.submit(waiter_prompt, SamplingParams(max_new_tokens=4))
-    # the waiter cannot admit while the hog holds every block
+    # the waiter cannot admit while the hog holds every block; at
+    # host_stride=4 the hog advances 4 positions per step, so probe
+    # with ONE step — more would march it into the pool wall (the
+    # single-sequence MemoryError) before the cancel arrives
     with llm._lock:
-        for _ in range(3):
+        for _ in range(3 if host_stride is None else 1):
             llm.engine.step()
     assert not waiter.generated and llm.stats["deferred"] >= 1
     it.close()                                     # client disconnects

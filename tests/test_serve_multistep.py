@@ -1,0 +1,345 @@
+"""Device-resident multi-step decode (``host_stride=K``): one jitted
+``lax.while_loop`` dispatch runs up to K fused comparator iterations —
+trunk forward, K/V scatter, on-device keyed sampling, feed-back — and
+the host drains the (B, K) token block through the ordinary per-token
+emission path.
+
+The acceptance surface:
+
+  - IDENTITY: generations and finish reasons are bit-identical across
+    every stride (reference: ``host_stride=1``) on the ragged
+    mixed-sampler trace, and greedy rows match a legacy
+    ``host_stride=None`` engine exactly (same argmax, no keys drawn);
+  - BOUNDED-LAG STOP: stop sequences are host-checked at stride
+    granularity — up to K-1 overrun tokens are generated then TRIMMED
+    before emission and the slot's KV is rewound, for every (stride,
+    stop position) combination;
+  - eos fires INSIDE the device loop (the row halts mid-block, its tail
+    is -1 padding, trailing rows are unaffected);
+  - CANCEL mid-stride (a consumer disconnect during the drain) trims
+    the rest of the row's block, frees its blocks immediately, and a
+    deferred request admits into the freed space;
+  - preemption/deferral under a tight pool re-serves the same tokens
+    (keyed streams survive re-prefill);
+  - chunked prefill composes: iterations with a mid-prefill slot fall
+    back to the legacy single fused step, still keyed, still identical;
+  - the submit/ctor gates reject what the loop cannot run (spec_k,
+    n_candidates, mesh-dependent heads, stride < 1) and incapable
+    configs warn + fall back to per-token dispatch;
+  - the stats contract: ``host_syncs`` counts every jitted dispatch
+    (prefills + decode calls), ``emitted_tokens`` every token through
+    ``_emit_token``, and ``tokens_per_dispatch`` is their ratio.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.params import SamplingParams
+from repro.serve.sampler import (
+    Greedy,
+    Sampler,
+    SoftmaxBaseline,
+    Temperature,
+    TopK,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk(arch="qwen3-0.6b", key=KEY):
+    cfg = smoke_config(ARCHS[arch])
+    return cfg, lm.init_params(cfg, key)
+
+
+def _prompts(cfg, n, seed=5, stagger=True):
+    rng = np.random.default_rng(seed)
+    lens = ([3 + (7 * i) % 23 for i in range(n)] if stagger
+            else [8] * n)
+    return [rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+            for L in lens]
+
+
+def _serve(params, cfg, prompts, *, host_stride, max_new=10, n_slots=3,
+           max_len=64, eos_id=-1, samplers=None, stops=None,
+           consumer=None, **kw):
+    """One engine pass; returns (reqs, engine)."""
+    eng = ServeEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                      eos_id=eos_id, kv_layout="paged",
+                      host_stride=host_stride, **kw)
+    if consumer is not None:
+        eng.add_consumer(lambda c: consumer(c, eng))
+    reqs = []
+    for i, p in enumerate(prompts):
+        sp = SamplingParams(
+            max_new_tokens=max_new, seed=100 + i,
+            stop=() if stops is None else stops[i])
+        reqs.append(Request(i, p.copy(), params=sp,
+                            sampler=None if samplers is None
+                            else samplers[i % len(samplers)]))
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_iters=10000)
+    return reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# Identity across strides / vs legacy / vs the softmax baseline
+# ---------------------------------------------------------------------------
+def test_stride_identity_mixed_samplers():
+    """The tentpole identity: the device loop changes how many
+    iterations ride one dispatch, never which tokens come out — across
+    strides, for greedy, top-k bus and Gumbel-max rows side by side."""
+    cfg, params = _mk()
+    prompts = _prompts(cfg, 6)
+    mixers = [Greedy(), TopK(4, temperature=0.8), Temperature(0.7)]
+    ref, _ = _serve(params, cfg, prompts, host_stride=1, samplers=mixers)
+    for stride in (2, 4, 8):
+        got, eng = _serve(params, cfg, prompts, host_stride=stride,
+                          samplers=mixers)
+        assert [r.generated for r in got] == [r.generated for r in ref], \
+            f"host_stride={stride} changed generations"
+        assert ([r.finish_reason for r in got]
+                == [r.finish_reason for r in ref])
+        free = eng.store.usage()
+        assert free["blocks_free"] == free["num_blocks"]
+
+
+def test_greedy_matches_legacy_and_softmax_baseline():
+    """Greedy takes no RNG draws, so the device loop must reproduce the
+    legacy per-token engine EXACTLY — and the softmax-baseline head
+    sampled on device agrees with the comparator (Theorem 1 inside the
+    while_loop)."""
+    cfg, params = _mk()
+    prompts = _prompts(cfg, 4)
+    legacy, _ = _serve(params, cfg, prompts, host_stride=None,
+                       samplers=[Greedy()])
+    for stride in (1, 4):
+        multi, _ = _serve(params, cfg, prompts, host_stride=stride,
+                          samplers=[Greedy()])
+        assert ([r.generated for r in multi]
+                == [r.generated for r in legacy])
+    soft, _ = _serve(params, cfg, prompts, host_stride=4,
+                     samplers=[SoftmaxBaseline()])
+    assert [r.generated for r in soft] == [r.generated for r in legacy]
+
+
+# ---------------------------------------------------------------------------
+# Bounded-lag stop sequences: trim + rewind at every (stride, position)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("stride", [2, 4, 8])
+@pytest.mark.parametrize("stop_at", [0, 3, 6])
+def test_stop_trimmed_at_stride_granularity(stride, stop_at):
+    """A stop match inside a K-token block: the row may have generated
+    up to K-1 tokens past the match on device; everything after the
+    stop is trimmed before emission and the KV write cursor rewound —
+    output identical to per-token stop checking at ANY stride and any
+    match position within the block."""
+    cfg, params = _mk()
+    prompts = _prompts(cfg, 3)
+    mixers = [Greedy(), TopK(4, temperature=0.8), Temperature(0.7)]
+    probe, _ = _serve(params, cfg, prompts, host_stride=1, max_new=12,
+                      samplers=mixers)
+    g0 = probe[0].generated
+    stop = (g0[stop_at],) if stop_at == 0 else tuple(g0[stop_at:stop_at + 2])
+    # expected cut: the FIRST window matching the stop (the pair drawn
+    # at stop_at may also occur earlier — the engine stops there)
+    end = next(j + 1 for j in range(len(stop) - 1, len(g0))
+               if tuple(g0[j - len(stop) + 1:j + 1]) == stop)
+    want = g0[:end]
+    stops = [[stop], (), ()]
+    ref, _ = _serve(params, cfg, prompts, host_stride=1, max_new=12,
+                    samplers=mixers, stops=stops)
+    assert ref[0].generated == want and ref[0].finish_reason == "stop"
+    got, eng = _serve(params, cfg, prompts, host_stride=stride,
+                      max_new=12, samplers=mixers, stops=stops)
+    assert got[0].generated == want, \
+        f"stride={stride} stop_at={stop_at}: overrun not trimmed"
+    assert got[0].finish_reason == "stop"
+    # the OTHER rows ride the same blocks and must be untouched by the
+    # stopped row's trim/rewind
+    assert [r.generated for r in got[1:]] == [r.generated for r in ref[1:]]
+    free = eng.store.usage()
+    assert free["blocks_free"] == free["num_blocks"]   # rewind + release
+
+
+def test_eos_halts_inside_device_loop():
+    """eos detected ON DEVICE: the row emits the eos token, halts for
+    the rest of the block (its tail is -1 padding the drain never
+    emits), and finishes with reason 'eos' at the exact legacy
+    position."""
+    cfg, params = _mk()
+    prompts = _prompts(cfg, 3)
+    probe, _ = _serve(params, cfg, prompts, host_stride=1, max_new=12)
+    g1 = probe[1].generated
+    eos_tok = next(t for t in g1[4:] if t not in g1[:4]
+                   and t not in probe[0].generated
+                   and t not in probe[2].generated)
+    ref, _ = _serve(params, cfg, prompts, host_stride=1, max_new=12,
+                    eos_id=eos_tok)
+    assert ref[1].finish_reason == "eos"
+    assert len(ref[1].generated) < 12
+    for stride in (4, 8):
+        got, _ = _serve(params, cfg, prompts, host_stride=stride,
+                        max_new=12, eos_id=eos_tok)
+        assert [r.generated for r in got] == [r.generated for r in ref]
+        assert ([r.finish_reason for r in got]
+                == [r.finish_reason for r in ref])
+
+
+# ---------------------------------------------------------------------------
+# Cancel mid-stride: trim, free, admit
+# ---------------------------------------------------------------------------
+def test_cancel_mid_stride_trims_frees_and_admits():
+    """A consumer cancel DURING the drain of a multi-step block (the
+    disconnect case): emission of that row stops at the cancel point,
+    the rest of its device-generated block is discarded, its KV blocks
+    free immediately, and a request deferred on the exhausted pool
+    admits into the freed space and finishes normally."""
+    cfg, params = _mk()
+    rng = np.random.default_rng(3)
+    hog = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    waiter = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    cancelled = {}
+
+    def consumer(c, eng):
+        # cancel the hog on its third token — mid-drain of a stride-8
+        # block, with most of the block still unemitted
+        if c.rid == 0 and c.index == 2 and not cancelled:
+            cancelled["at"] = c.token
+            assert eng.cancel(reqs[0])
+
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=64, eos_id=-1,
+                      kv_layout="paged", host_stride=8,
+                      block_size=8, num_blocks=3)
+    eng.add_consumer(lambda c: consumer(c, eng))
+    reqs = [Request(0, hog.copy(), params=SamplingParams(
+                max_new_tokens=40, seed=100)),
+            Request(1, waiter.copy(), params=SamplingParams(
+                max_new_tokens=4, seed=101))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_iters=10000)
+    assert cancelled, "cancel consumer never fired"
+    assert reqs[0].finish_reason == "cancelled"
+    assert len(reqs[0].generated) == 3          # trimmed at the cancel
+    assert reqs[1].done and len(reqs[1].generated) == 4
+    free = eng.store.usage()
+    assert free["blocks_free"] == free["num_blocks"]
+    assert eng.stats["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Preemption / deferral and chunked prefill compose
+# ---------------------------------------------------------------------------
+def test_preemption_identity_under_tight_pool():
+    """Stride boundaries are the only scheduling sync points, and the
+    keyed streams survive preempt-to-queue + re-prefill: a tight pool
+    (which MUST preempt) serves the same tokens as an ample one."""
+    cfg, params = _mk()
+    prompts = _prompts(cfg, 3, stagger=False)
+    mixers = [TopK(4, temperature=0.8)]
+    ample, _ = _serve(params, cfg, prompts, host_stride=4, max_new=12,
+                      n_slots=2, samplers=mixers, block_size=8)
+    tight, eng = _serve(params, cfg, prompts, host_stride=4, max_new=12,
+                        n_slots=2, samplers=mixers, block_size=8,
+                        num_blocks=4)
+    assert eng.stats["preemptions"] >= 1        # scheduling DID differ
+    assert [r.generated for r in tight] == [r.generated for r in ample]
+
+
+def test_chunked_prefill_composes_with_host_stride():
+    """Iterations with a mid-prefill slot fall back to the legacy
+    single fused step (still keyed); pure-decode iterations ride the
+    device loop — and the composition is bit-identical to stride-1
+    unchunked serving."""
+    cfg, params = _mk()
+    prompts = _prompts(cfg, 4)
+    mixers = [Greedy(), Temperature(0.7)]
+    ref, _ = _serve(params, cfg, prompts, host_stride=1,
+                    samplers=mixers)
+    got, eng = _serve(params, cfg, prompts, host_stride=8,
+                      samplers=mixers, chunk_size=4)
+    assert eng.stats["prefill_chunks"] > 0      # chunking DID engage
+    assert eng.stats["decode_steps"] > 0
+    assert [r.generated for r in got] == [r.generated for r in ref]
+
+
+# ---------------------------------------------------------------------------
+# Gates and fallbacks
+# ---------------------------------------------------------------------------
+def test_submit_gates_reject_incompatible_requests():
+    cfg, params = _mk()
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=64, eos_id=-1,
+                      host_stride=4)
+    p = _prompts(cfg, 1)[0]
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        eng.submit(Request(0, p.copy(),
+                           params=SamplingParams(spec_k=2)))
+    with pytest.raises(ValueError, match="n_candidates"):
+        eng.submit(Request(1, p.copy(),
+                           params=SamplingParams(n_candidates=4)))
+
+    class HostOnly(Greedy):
+        # a sampler that never grew a device sampling form
+        sample_device = Sampler.sample_device
+
+    with pytest.raises(ValueError, match="no device sampling form"):
+        eng.submit(Request(2, p.copy(), sampler=HostOnly()))
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, n_slots=2, max_len=64, host_stride=0)
+
+
+def test_incapable_config_warns_and_falls_back():
+    """host_stride on a config the loop cannot run (the cohort
+    scheduler has no grouped multi-sampler step body) warns and serves
+    per-token — never silently wrong, never crashing."""
+    cfg, params = _mk()
+    with pytest.warns(UserWarning, match="host_stride=4 ignored"):
+        eng = ServeEngine(params, cfg, n_slots=2, max_len=64, eos_id=-1,
+                          host_stride=4, scheduler="cohort")
+    assert eng.host_stride is None
+    p = _prompts(cfg, 1)[0]
+    r = Request(0, p.copy(), params=SamplingParams(max_new_tokens=4))
+    eng.submit(r)
+    eng.run()
+    assert len(r.generated) == 4
+
+
+# ---------------------------------------------------------------------------
+# Stats contract
+# ---------------------------------------------------------------------------
+def test_host_syncs_and_tokens_per_dispatch():
+    """host_syncs counts every jitted dispatch (one-shot prefills +
+    decode calls of either shape), emitted_tokens every token through
+    _emit_token; stride K needs ~K-fold fewer decode dispatches for the
+    same tokens."""
+    cfg, params = _mk()
+    prompts = _prompts(cfg, 4)
+
+    def stats_at(stride):
+        reqs, eng = _serve(params, cfg, prompts, host_stride=stride,
+                           max_new=12, n_slots=2)
+        s = eng.snapshot()
+        assert s["emitted_tokens"] == sum(len(r.generated) for r in reqs)
+        assert s["host_syncs"] == s["prefills"] + s["decode_steps"]
+        assert s["tokens_per_dispatch"] == pytest.approx(
+            s["emitted_tokens"] / s["host_syncs"])
+        return s
+
+    s1 = stats_at(1)
+    s8 = stats_at(8)
+    assert s1["emitted_tokens"] == s8["emitted_tokens"]
+    # 4 requests x 12 tokens over 2 slots at stride 8: decode dispatches
+    # collapse from ~one-per-position to ~one-per-block
+    assert s8["decode_steps"] * 4 <= s1["decode_steps"]
+    assert s8["tokens_per_dispatch"] > 2 * s1["tokens_per_dispatch"]
+    # legacy engines keep the counters too (host_syncs == every jitted
+    # dispatch, so the ratio stays meaningful without a device loop)
+    reqs, eng = _serve(params, cfg, prompts, host_stride=None,
+                       max_new=12, n_slots=2)
+    s = eng.snapshot()
+    assert s["host_syncs"] == s["prefills"] + s["decode_steps"]
+    assert s["emitted_tokens"] == sum(len(r.generated) for r in reqs)
