@@ -12,7 +12,11 @@ point) and the MULTI-STEP sweep (``host_stride`` ∈ {1, 2, 4, 8, 16}
 device-resident decode on the ragged mixed-sampler trace with
 stop/eos/length/cancel paths live: tok/s, host dispatches per token and
 ITL percentiles, generations asserted bit-identical to host_stride=1 at
-every point).
+every point) and the PREFIX sweep (64 requests sharing one 512-token
+system prompt mixed with cold traffic, ``prefix_cache`` off vs on:
+prefill tokens computed, shared-class TTFT and peak pool blocks, with
+token-identity asserted at the base point and under preemption, spec_k
+and host_stride composition).
 
 For each n_slots the same request trace (mixed short/medium/long prompts)
 is served by:
@@ -616,6 +620,185 @@ def multistep_sweep(arch="qwen3-0.6b", strides=(1, 2, 4, 8, 16),
                 dispatch_reduction_at_8=reduction)
 
 
+def prefix_sweep(arch="qwen3-0.6b", n_shared=64, n_cold=16,
+                 prefix_len=512, max_new=8, n_slots=4, chunk_size=32,
+                 block_size=16, verbose=True):
+    """Copy-on-write prefix sharing A/B: ``n_shared`` requests that all
+    open with the SAME ``prefix_len``-token system prompt (each with a
+    short unique suffix), mixed with ``n_cold`` unrelated cold prompts,
+    served closed-loop on the chunked engine with ``prefix_cache`` off
+    vs on.
+
+    With sharing on, the first completed request publishes its
+    full-block KV runs into the prefix trie; every later arrival with
+    the same opening adopts those blocks at admission — refcounted,
+    copy-on-write at the first diverging write — and chunk-prefills
+    only its suffix.  The headline columns: prefill tokens actually
+    computed (the savings denominator the 2x acceptance floor is on),
+    TTFT over the shared class (adopters skip the whole system-prompt
+    prefill), peak pool blocks in use (admission capacity: one KV run
+    serves every concurrent sharer), cow_copies and the high-water
+    shared-block count.  Generations are asserted token-identical to
+    ``prefix_cache=False`` at the base point AND at every composition
+    point — under pool-pressure preemption (a preempted sharer re-folds
+    and re-adopts; its siblings' blocks stay bit-intact), under
+    speculative decoding (``spec_k``: accept/rewind COWs before
+    touching a shared block) and under device-resident multi-step
+    decode (``host_stride``) — sharing changes which pool block a row
+    attends through, never which token comes out.
+    """
+    from repro.serve.params import SamplingParams
+
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(21)
+    system = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    kinds = ["shared"] * n_shared + ["cold"] * n_cold
+    rng.shuffle(kinds)                 # cold traffic mixed in, not batched
+    prompts, shared_mask = [], []
+    for kind in kinds:
+        if kind == "shared":
+            sfx = rng.integers(0, cfg.vocab_size,
+                               int(rng.integers(4, 16))).astype(np.int32)
+            prompts.append(np.concatenate([system, sfx]))
+        else:
+            prompts.append(rng.integers(
+                0, cfg.vocab_size,
+                int(rng.integers(32, 96))).astype(np.int32))
+        shared_mask.append(kind == "shared")
+    max_len = prefix_len + 16 + max_new + 8
+
+    def serve(trace, mask, *, prefix, ml, num_blocks=None, spec_k=0,
+              host_stride=None):
+        eng = ServeEngine(params, cfg, n_slots=n_slots, max_len=ml,
+                          eos_id=1, chunk_size=chunk_size,
+                          block_size=block_size, num_blocks=num_blocks,
+                          host_stride=host_stride, prefix_cache=prefix)
+        shared_hi = 0                  # high-water refcount>1 block count
+
+        def watch(_):
+            nonlocal shared_hi
+            shared_hi = max(shared_hi, eng.store.allocator.n_shared)
+
+        eng.add_consumer(watch)
+        if spec_k:
+            reqs = [Request(i, p.copy(), params=SamplingParams(
+                        max_new_tokens=max_new, spec_k=spec_k))
+                    for i, p in enumerate(trace)]
+        else:
+            reqs = [Request(i, p.copy(), max_new)
+                    for i, p in enumerate(trace)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        stats = eng.run(max_iters=100000)
+        wall = time.perf_counter() - t0
+        snap = eng.snapshot()
+        ttft = [(r.t_first - r.t_submit) * 1e3 for r in reqs]
+        ttft_shared = [t for t, s in zip(ttft, mask) if s] or ttft
+        toks = sum(len(r.generated) for r in reqs)
+        return dict(wall=wall, tok_s=toks / wall,
+                    ttft_ms_p50=float(np.percentile(ttft, 50)),
+                    ttft_ms_p99=float(np.percentile(ttft, 99)),
+                    ttft_shared_ms_p50=float(
+                        np.percentile(ttft_shared, 50)),
+                    ttft_shared_ms_p99=float(
+                        np.percentile(ttft_shared, 99)),
+                    prefill_tokens=int(stats["prefill_tokens"]),
+                    prefix_hits=int(stats["prefix_hits"]),
+                    prefix_hit_tokens=int(stats["prefix_hit_tokens"]),
+                    cow_copies=int(snap["cow_copies"]),
+                    peak_in_use=int(snap["peak_in_use"]),
+                    shared_blocks_max=int(shared_hi),
+                    preemptions=int(stats["preemptions"]),
+                    gens=[list(r.generated) for r in reqs])
+
+    # warmup: compile both arms' chunk-width buckets on a small slice
+    mini, mini_mask = prompts[:6], shared_mask[:6]
+    serve(mini, mini_mask, prefix=True, ml=max_len)
+    serve(mini, mini_mask, prefix=False, ml=max_len)
+
+    off = serve(prompts, shared_mask, prefix=False, ml=max_len)
+    on = serve(prompts, shared_mask, prefix=True, ml=max_len)
+    # the acceptance identity: sharing changes which pool block a row
+    # attends through, never which token comes out
+    assert on["gens"] == off["gens"], \
+        "prefix sharing changed generations (base trace)"
+    savings = off["prefill_tokens"] / max(on["prefill_tokens"], 1)
+    assert savings >= 2.0, \
+        f"prefix sharing saved only {savings:.2f}x prefill tokens (< 2x)"
+    assert on["ttft_shared_ms_p50"] < off["ttft_shared_ms_p50"], \
+        "prefix sharing did not improve shared-class TTFT p50"
+    if verbose:
+        print(f"trace: {n_shared} chats x {prefix_len}-token shared "
+              f"system prompt + {n_cold} cold prompts "
+              f"(chunk {chunk_size}, block {block_size})")
+        for name, r in (("prefix off", off), ("prefix on ", on)):
+            print(f"{name}: {r['prefill_tokens']:6d} prefill tokens | "
+                  f"shared-class TTFT p50 {r['ttft_shared_ms_p50']:8.1f} "
+                  f"ms  p99 {r['ttft_shared_ms_p99']:8.1f} ms | "
+                  f"{r['tok_s']:6.1f} tok/s | peak {r['peak_in_use']:3d} "
+                  f"blocks | hits {r['prefix_hits']}")
+        print(f"prefill-token savings {savings:.2f}x, shared-class TTFT "
+              f"p50 {off['ttft_shared_ms_p50'] / on['ttft_shared_ms_p50']:.2f}x "
+              f"better, {on['prefix_hit_tokens']} tokens served from "
+              f"shared blocks ({on['shared_blocks_max']} blocks shared "
+              f"at peak; outputs identical)")
+
+    # composition points: the same identity under preemption pressure,
+    # speculative decoding and device-resident multi-step decode — a
+    # small shared trace each (scale is the base point's job)
+    rng2 = np.random.default_rng(22)
+    sys2 = rng2.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    small, small_mask = [], []
+    for i in range(10):
+        if i % 5 == 4:
+            small.append(rng2.integers(0, cfg.vocab_size, 24)
+                         .astype(np.int32))
+            small_mask.append(False)
+        else:
+            small.append(np.concatenate(
+                [sys2, rng2.integers(0, cfg.vocab_size,
+                                     int(rng2.integers(4, 12)))
+                 .astype(np.int32)]))
+            small_mask.append(True)
+    ml2 = 96
+    per_req = -(-ml2 // block_size)            # blocks to finish one req
+    points = []
+    for name, kw in (
+            ("preempt", dict(num_blocks=per_req + per_req // 2)),
+            ("spec_k4", dict(spec_k=4)),
+            ("host_stride8", dict(host_stride=8))):
+        o = serve(small, small_mask, prefix=False, ml=ml2, **kw)
+        n = serve(small, small_mask, prefix=True, ml=ml2, **kw)
+        assert n["gens"] == o["gens"], \
+            f"prefix sharing changed generations ({name})"
+        if name == "preempt":
+            assert n["preemptions"] >= 1, \
+                "preempt point never preempted — pool not tight enough"
+        row = dict(point=name, prefill_savings=o["prefill_tokens"]
+                   / max(n["prefill_tokens"], 1))
+        for k, r in (("off", o), ("on", n)):
+            r.pop("gens")
+            row[k] = r
+        points.append(row)
+        if verbose:
+            print(f"{name:12s}: identical outputs; "
+                  f"{row['prefill_savings']:.2f}x prefill savings, "
+                  f"hits {n['prefix_hits']}, cow {n['cow_copies']}, "
+                  f"preempt {n['preemptions']}")
+    for r in (off, on):
+        r.pop("gens")
+    return dict(n_shared=n_shared, n_cold=n_cold, prefix_len=prefix_len,
+                chunk_size=chunk_size, block_size=block_size,
+                n_slots=n_slots, max_new=max_new, off=off, on=on,
+                # the headline: prefill tokens actually computed, off/on
+                prefill_savings=savings,
+                ttft_shared_p50_speedup=off["ttft_shared_ms_p50"]
+                / on["ttft_shared_ms_p50"],
+                points=points)
+
+
 def streaming_latency(arch="qwen3-0.6b", n_requests=8, max_new=12,
                       n_slots=4, max_len=96, verbose=True):
     """Streaming metrics through the LLM facade: per-request TTFT
@@ -688,6 +871,12 @@ def main():
                     help="host_stride sweep points for the device-"
                          "resident multi-step decode columns (include 1 "
                          "and 8 for the dispatch-reduction headline)")
+    ap.add_argument("--prefix-requests", type=int, default=64,
+                    help="shared-prefix request count for the prefix-"
+                         "sharing sweep")
+    ap.add_argument("--prefix-len", type=int, default=512,
+                    help="shared system-prompt length for the prefix-"
+                         "sharing sweep")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     rows = run(arch=args.arch, slot_counts=tuple(args.slots),
@@ -717,6 +906,11 @@ def main():
     jax.clear_caches()
     multistep = multistep_sweep(arch=args.arch,
                                 strides=tuple(args.strides))
+    print("\nprefix sharing (copy-on-write paged KV) on a shared-"
+          "system-prompt trace:")
+    jax.clear_caches()
+    prefix = prefix_sweep(arch=args.arch, n_shared=args.prefix_requests,
+                          prefix_len=args.prefix_len)
     print("\nstreaming TTFT / inter-token latency (LLM facade):")
     streaming = streaming_latency(arch=args.arch,
                                   n_requests=args.requests,
@@ -733,6 +927,7 @@ def main():
                    "slot_sweep": rows, "ragged_sweep": ragged,
                    "spec_sweep": spec, "chunked_sweep": chunked,
                    "multistep_sweep": multistep,
+                   "prefix_sweep": prefix,
                    "streaming": streaming,
                    "latency_vs_max_len": sweep},
                   f, indent=2)

@@ -19,7 +19,11 @@ Sampler heads in one jitted call — are unchanged underneath):
     the API level;
   - speculative decoding (``spec_k``): prompt-lookup drafts verified by
     the same comparator, multiple tokens per fused iteration,
-    bit-identical output.
+    bit-identical output;
+  - prefix sharing (chunked engines): requests with the same system
+    prompt attend through ONE set of pool blocks — later arrivals
+    prefill only their suffix, and the output is token-identical to
+    ``prefix_cache=False``.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -135,6 +139,43 @@ def main():
     assert [o.token_ids for o in spec] == [o.token_ids for o in plain]
     assert s["accepted"] > 0
     assert sum(len(o.token_ids) for o in spec) > spec_iters
+
+    # Prefix sharing: 8 requests that open with the SAME 48-token system
+    # prompt.  On a chunked engine the first request prefills and (on
+    # completion) publishes its full-block KV runs into the prefix trie;
+    # the other 7 adopt those blocks at admission — refcounted, COW on
+    # write — and prefill only their few-token suffix.  One KV, many
+    # users; output token-identical to prefix_cache=False.
+    system = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+    chats = [np.concatenate([system,
+                             rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(4, 12))
+                                          ).astype(np.int32)])
+             for _ in range(8)]
+    pp = SamplingParams(max_new_tokens=8)
+    shared = LLM(llm.engine.params, cfg, n_slots=4, max_len=96, eos_id=1,
+                 kv_layout="paged", block_size=16, chunk_size=16)
+    outs_on = shared.generate(chats, pp)
+    st, kvs = shared.stats, shared.kv_usage()
+    cold = LLM(llm.engine.params, cfg, n_slots=4, max_len=96, eos_id=1,
+               kv_layout="paged", block_size=16, chunk_size=16)
+    outs_off = cold.generate(
+        chats, SamplingParams(max_new_tokens=8, prefix_cache=False))
+    saved = cold.stats["prefill_tokens"] - st["prefill_tokens"]
+    print(f"\nprefix sharing (8 chats, one 48-token system prompt): "
+          f"{st['prefix_hits']} hits, {st['prefix_hit_tokens']} tokens "
+          f"served from shared blocks ({st['prefill_tokens']} prefilled "
+          f"vs {cold.stats['prefill_tokens']} cold, {saved} saved), "
+          f"cow_copies={st['cow_copies']} "
+          f"peak_in_use={kvs['peak_in_use']} blocks")
+    assert [o.token_ids for o in outs_on] == \
+        [o.token_ids for o in outs_off], \
+        "prefix sharing changed generations"
+    # the first wave (4 slots) admits cold before anyone has published;
+    # the second wave all hits
+    assert st["prefix_hits"] >= 4
+    assert st["prefill_tokens"] < cold.stats["prefill_tokens"]
+    assert cold.stats["prefix_hits"] == 0  # params opt-out really off
 
 
 if __name__ == "__main__":

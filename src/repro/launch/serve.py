@@ -89,6 +89,19 @@ def main():
                          "per-request PRNG keys; outputs identical "
                          "across strides); mutually exclusive with "
                          "--spec-k")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="prefix sharing (default on): completed "
+                         "requests publish their full-block KV runs "
+                         "into a trie; later requests with the same "
+                         "prompt prefix attend through the SAME pool "
+                         "blocks (copy-on-write) and prefill only their "
+                         "suffix — needs --chunk-size; outputs are "
+                         "token-identical either way")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable prefix sharing (every request "
+                         "prefills and stores its own KV)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
                     help="instead of the batch run: start the SSE HTTP "
@@ -120,6 +133,7 @@ def main():
                   chunk_size=args.chunk_size,
                   token_budget=args.token_budget,
                   host_stride=args.host_stride,
+                  prefix_cache=args.prefix_cache,
                   mesh=mesh, seed=args.seed)
         serve_forever(llm, host=args.http_host, port=args.serve_http)
         return
@@ -130,6 +144,7 @@ def main():
                       chunk_size=args.chunk_size,
                       token_budget=args.token_budget,
                       host_stride=args.host_stride,
+                      prefix_cache=args.prefix_cache,
                       mesh=mesh, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -161,8 +176,12 @@ def main():
     stride = (f"host_syncs={stats['host_syncs']} "
               f"tok/dispatch={snap['tokens_per_dispatch']:.2f} "
               if eng.host_stride is not None else "")
+    prefix = (f"prefix_hits={stats['prefix_hits']} "
+              f"prefix_hit_tokens={stats['prefix_hit_tokens']} "
+              f"cow_copies={snap['cow_copies']} "
+              if eng.prefix_cache else "")
     print(f"sampler={sampler} kv={args.kv_layout} sched={args.scheduler} "
-          f"{chunk}{stride}"
+          f"{chunk}{stride}{prefix}"
           f"served={stats['completed']} decode_steps={stats['decode_steps']} "
           f"iterations={stats['iterations']} "
           f"rows/step={stats['fused_rows'] / max(stats['decode_steps'], 1):.2f} "

@@ -323,7 +323,8 @@ class ServeEngine:
                  scheduler: str = "fused", mesh=None, seed: int = 0,
                  drafter=None, chunk_size: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 host_stride: Optional[int] = None):
+                 host_stride: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -409,6 +410,12 @@ class ServeEngine:
                 stacklevel=2)
             host_stride = None
         self.host_stride = host_stride
+        # prefix sharing needs chunked admission: a trie hit starts
+        # prefill at the SUFFIX boundary mid-prompt, which only the
+        # chunk machinery can do (one-shot prefill always scatters from
+        # position 0).  Engines without chunk_size just serve cold, so
+        # the default True costs nothing there.
+        self.prefix_cache = bool(prefix_cache) and self.chunk_size is not None
         # bounded lookahead past the queue head for length-bucketed
         # admission packing (chunked only; 1 = strict FIFO).
         self.pack_lookahead = 8
@@ -429,11 +436,17 @@ class ServeEngine:
         # tokens through _emit_token, so emitted_tokens / host_syncs
         # (``tokens_per_dispatch`` in snapshot()) is the amortization
         # actually achieved.
+        # prefix_hits / prefix_hit_tokens count admissions that mapped a
+        # cached run (and the tokens they skipped); prefill_tokens counts
+        # prompt tokens ACTUALLY prefilled (one-shot scatters + chunk
+        # rows) — the denominator of the prefix-cache savings metric.
         self.stats = {"prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
                       "iterations": 0, "fused_rows": 0, "completed": 0,
                       "deferred": 0, "preemptions": 0, "cancelled": 0,
                       "drafted": 0, "accepted": 0, "acceptance_rate": 0.0,
-                      "host_syncs": 0, "emitted_tokens": 0}
+                      "host_syncs": 0, "emitted_tokens": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prefill_tokens": 0}
         # per-request TTFT samples (ms, submit -> first token), feeding
         # the percentile columns of ``snapshot()`` / GET /v1/stats.
         self._ttft_ms: List[float] = []
@@ -463,6 +476,9 @@ class ServeEngine:
         s["active_slots"] = sum(sl is not None for sl in self.slots)
         s["tokens_per_dispatch"] = (
             s["emitted_tokens"] / max(s["host_syncs"], 1))
+        s["cow_copies"] = self.store.cow_copies
+        s["shared_blocks"] = self.store.allocator.n_shared
+        s["peak_in_use"] = self.store.allocator.peak_in_use
         if self._ttft_ms:
             t = np.asarray(self._ttft_ms)
             s["ttft_ms_p50"] = float(np.percentile(t, 50))
@@ -645,6 +661,13 @@ class ServeEngine:
             with env.use_mesh(self.mesh):
                 if self.store.any_paged:
                     blocks = self.store.alloc_blocks(i, S)
+                    # install_prefill COW rule: the jitted prefill
+                    # scatters [0, S) into donated pools, so any shared
+                    # cover would have to copy HERE.  One-shot slots
+                    # only ever hold the fresh blocks just allocated
+                    # (prefix adoption is chunked-only), so this is the
+                    # enforced no-op form of the invariant.
+                    self.store.cow_for_write(i, 0, S - 1)
                     fn = _jitted_prefill_paged(
                         self.cfg, dev, plen,
                         tuple(self.store.paged_mask), self.mesh)
@@ -657,6 +680,7 @@ class ServeEngine:
                     out, cache1 = fn(self.params, batch)
                     self.store.admit(i, jax.tree.flatten(cache1)[0], S)
             self.stats["prefills"] += 1
+            self.stats["prefill_tokens"] += S
             self.stats["host_syncs"] += 1
             self.slots[i] = req
             self.slot_pos[i] = S
@@ -703,13 +727,24 @@ class ServeEngine:
             del self.queue[pick]
             if req.t_admit is None:       # re-prefill keeps the first stamp
                 req.t_admit = time.perf_counter()
-            first = min(self.chunk_size, len(req.prompt))
-            bucket = _pow2(first)
+            hit = 0
+            if self.prefix_cache and req.params.prefix_cache:
+                # map the longest cached whole-block run into the slot's
+                # table; chunked prefill then starts at the SUFFIX
+                # boundary (positions are per-row already, so nothing
+                # downstream changes).  Adoption precedes the reserve so
+                # eviction under pressure cannot reclaim the run first.
+                hit = self.store.adopt_prefix(i, req.prompt)
+                if hit:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_hit_tokens"] += hit
+            width = min(self.chunk_size, len(req.prompt) - hit)
+            bucket = _pow2(width)
             # reserve the first chunk's cover NOW so this iteration's
             # later can_admit checks see the honest free count
-            self.store.ensure_capacity(i, first - 1)
+            self.store.ensure_capacity(i, hit + width - 1, write_start=hit)
             self.slots[i] = req
-            self.slot_pos[i] = 0          # write cursor: nothing scattered
+            self.slot_pos[i] = hit        # write cursor: suffix starts here
             self.admit_order.append(i)
             if budget is not None:
                 budget -= 1
@@ -814,9 +849,11 @@ class ServeEngine:
             if not 0 <= int(t) < self.cfg.vocab_size:
                 break             # a bad drafter id can never be accepted
             drafts.append(int(t))
-        while drafts and not self.store.can_grow(i, pos + len(drafts)):
+        while drafts and not self.store.can_grow(i, pos + len(drafts),
+                                                 write_start=pos):
             drafts.pop()
-        if drafts and not self.store.ensure_capacity(i, pos + len(drafts)):
+        if drafts and not self.store.ensure_capacity(i, pos + len(drafts),
+                                                     write_start=pos):
             return []             # lost a race with another slot's growth
         return drafts
 
@@ -848,9 +885,10 @@ class ServeEngine:
                 later = len(pre) - n - 1       # reserve 1 token each
                 w = max(1, min(w, avail - later))
                 avail -= w
-            while w > 1 and not self.store.can_grow(i, start + w - 1):
+            while w > 1 and not self.store.can_grow(i, start + w - 1,
+                                                    write_start=start):
                 w -= 1
-            self.store.ensure_capacity(i, start + w - 1)
+            self.store.ensure_capacity(i, start + w - 1, write_start=start)
             chunks[i] = (start, w)
         return chunks
 
@@ -996,6 +1034,7 @@ class ServeEngine:
                 start, w = chunks[i]
                 self.slot_pos[i] = start + w
                 self.stats["prefill_chunks"] += 1
+                self.stats["prefill_tokens"] += w
                 if start + w == len(req.prompt):
                     self.stats["prefills"] += 1
                     self._emit(i, req, host[dev], off)
@@ -1060,9 +1099,11 @@ class ServeEngine:
             pos = int(self.slot_pos[i])
             cap = max(1, min(K, req.max_new_tokens - len(req.generated),
                              self.max_len - 1 - pos))
-            while cap > 1 and not self.store.can_grow(i, pos + cap - 1):
+            while cap > 1 and not self.store.can_grow(i, pos + cap - 1,
+                                                      write_start=pos):
                 cap -= 1
-            if cap > 1 and not self.store.ensure_capacity(i, pos + cap - 1):
+            if cap > 1 and not self.store.ensure_capacity(i, pos + cap - 1,
+                                                          write_start=pos):
                 cap = 1           # lost a race; ``pos`` itself is covered
             caps[i] = cap
         n_real = len(rows)
@@ -1145,7 +1186,20 @@ class ServeEngine:
         return self.slots[i] is not None
 
     def _release_slot(self, i: int):
-        self.store.release(i)
+        req = self.slots[i]
+        publish = None
+        if self.prefix_cache and req is not None and req.params.prefix_cache:
+            # the slot's K/V rows [0, slot_pos) hold exactly this token
+            # history (original prompt ++ emissions — re-prefills and
+            # spec rewinds preserve this), so the full-block run is
+            # publishable whatever path ends here: completion, cancel,
+            # or preemption.  A preempted request then re-matches its
+            # own run at re-admission and re-prefills only the tail.
+            publish = np.concatenate(
+                [np.asarray(req.orig_prompt, np.int32),
+                 np.asarray(req.generated, np.int32)]
+            )[:int(self.slot_pos[i])]
+        self.store.release(i, publish_tokens=publish)
         self.slots[i] = None
         self.admit_order.remove(i)
 

@@ -50,6 +50,14 @@ caller attaches to a request — and the single thing
                     token, identical across strides; ``n_candidates``
                     is rejected there (the k-winner bus is consumed on
                     device).
+  prefix_cache      opt-out of PREFIX SHARING for this request (engines
+                    with ``chunk_size`` set share whole KV blocks across
+                    requests with a common prompt prefix).  False means
+                    this request neither adopts cached blocks nor
+                    publishes its own on completion — outputs are
+                    token-identical either way (the cached blocks hold
+                    bit-equal K/V); the knob exists for isolation, e.g.
+                    benchmarking the cold path.
 
 Frozen + hashable on purpose: params ride into jit-cache keys via the
 resolved Sampler, and a shared default instance is safe.
@@ -97,6 +105,7 @@ class SamplingParams:
     head_mode: Optional[str] = None
     n_candidates: int = 0
     spec_k: int = 0
+    prefix_cache: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "stop", _normalize_stop(self.stop))

@@ -52,7 +52,7 @@ from repro.serve.api import LLM
 from repro.serve.params import SamplingParams
 
 _PARAM_KEYS = ("max_new_tokens", "temperature", "top_k", "seed", "stop",
-               "head_mode", "n_candidates", "spec_k")
+               "head_mode", "n_candidates", "spec_k", "prefix_cache")
 
 
 def params_from_json(body: dict) -> SamplingParams:

@@ -1,0 +1,354 @@
+"""Copy-on-write prefix sharing in the paged KV store.
+
+The contracts under test:
+
+  - REFCOUNTS: ``free`` decrements and a block returns to the free list
+    only at zero; double-free of a fully-freed shared block raises;
+    ``peak_in_use`` tracks the pool high-watermark.
+  - TRIE: ``release(slot, publish_tokens=...)`` installs full-block
+    runs; ``match_prefix`` returns the longest cached run, capped one
+    token short of the prompt (a suffix always remains to prefill);
+    divergence stops the walk at the shared boundary.
+  - COW: a slot writing into a block with refcount > 1 copies it first
+    — ``rewind`` into a shared block leaves the sibling's pool content
+    bit-identical.
+  - EVICTION: LRU over trie-only (refcount-1) runs; a block a slot
+    still maps is NEVER handed out; ``can_admit`` counts reclaimable
+    blocks as free.
+  - ENGINE identity: shared == unshared token-exactly, including under
+    preemption of a sharing request and composed with spec_k /
+    host_stride; ``SamplingParams(prefix_cache=False)`` opts a single
+    request out of both adoption and publication.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged_kv import BlockAllocator, PagedKVStore
+from repro.serve.params import SamplingParams
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(ARCHS["qwen3-0.6b"])
+    params = lm.init_params(cfg, KEY)
+    yield cfg, params
+    jax.clear_caches()
+
+
+def _store(params, cfg, block_size=4, n_slots=4, max_len=32,
+           num_blocks=None):
+    return PagedKVStore(params, cfg, n_slots=n_slots, max_len=max_len,
+                        block_size=block_size, num_blocks=num_blocks)
+
+
+def _serve(params, cfg, prompts, *, max_new=6, prefix_cache=True,
+           sampling=None, n_slots=2, max_len=64, block_size=4,
+           chunk_size=8, **kw):
+    eng = ServeEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                      eos_id=-1, block_size=block_size,
+                      chunk_size=chunk_size, prefix_cache=prefix_cache,
+                      **kw)
+    sp = sampling or SamplingParams(max_new_tokens=max_new)
+    reqs = [Request(i, p.copy(), params=sp) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    return [r.generated for r in reqs], stats, eng
+
+
+def _shared_prompts(cfg, n=6, shared_len=24, suffix_len=5, seed=3):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_len).astype(np.int32)
+    return [np.concatenate(
+        [shared, rng.integers(0, cfg.vocab_size, suffix_len)
+         .astype(np.int32)]) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# allocator refcounts
+# ---------------------------------------------------------------------------
+def test_allocator_refcounts_and_peak():
+    a = BlockAllocator(4)
+    x = a.alloc(2)
+    assert a.peak_in_use == 2
+    a.incref([x[0]])
+    assert a.refcount(x[0]) == 2 and a.n_shared == 1
+    a.free([x[0]])                    # decrement only: still live
+    assert a.refcount(x[0]) == 1 and a.n_free == 2 and a.n_shared == 0
+    a.free(x)                         # both hit zero -> free list
+    assert a.n_free == 4
+    with pytest.raises(ValueError):   # double-free of the shared block
+        a.free([x[0]])
+    with pytest.raises(ValueError):   # incref needs a live block
+        a.incref([x[0]])
+    y = a.alloc(3)
+    assert a.peak_in_use == 3         # high-watermark is monotone
+    a.free(y)
+    assert a.peak_in_use == 3
+
+
+# ---------------------------------------------------------------------------
+# trie publish / match / adopt
+# ---------------------------------------------------------------------------
+def test_trie_publish_match_and_suffix_cap(setup):
+    cfg, params = setup
+    st = _store(params, cfg)
+    toks = np.arange(12, dtype=np.int32)          # 3 full blocks @ bs=4
+    st.slot_blocks[0] = st.allocator.alloc(3)
+    blocks = list(st.slot_blocks[0])
+    st.release(0, publish_tokens=toks)
+    # all three blocks live in the trie, none freed
+    assert st.allocator.n_free == st.allocator.num_blocks - 3
+    assert st.prefix_trie.nodes == 3
+    got, n = st.match_prefix(np.concatenate([toks, [99]]))
+    assert got == blocks and n == 12
+    # whole-prompt match is capped one token short: a 12-token prompt
+    # matches at most (12-1)//4 = 2 blocks, so a suffix always remains
+    got, n = st.match_prefix(toks)
+    assert got == blocks[:2] and n == 8
+    # divergence mid-block stops the walk at the shared boundary
+    div = np.concatenate([toks, [99]])
+    div[5] = 77
+    got, n = st.match_prefix(div)
+    assert got == blocks[:1] and n == 4
+
+
+def test_adopt_prefix_increfs_and_republish_dedups(setup):
+    cfg, params = setup
+    st = _store(params, cfg)
+    toks = np.arange(8, dtype=np.int32)
+    st.slot_blocks[0] = st.allocator.alloc(2)
+    blocks = list(st.slot_blocks[0])
+    st.release(0, publish_tokens=toks)
+    hit = st.adopt_prefix(1, np.concatenate([toks, [50, 51, 52]]))
+    assert hit == 8 and st.slot_blocks[1] == blocks
+    assert all(st.allocator.refcount(b) == 2 for b in blocks)
+    # re-publishing the SAME run (the adopter completing) dedups: the
+    # slot's references drop, the trie keeps exactly one per block
+    st.release(1, publish_tokens=np.asarray(
+        list(toks) + [50, 51, 52], np.int32))
+    assert st.prefix_trie.nodes == 2
+    assert all(st.allocator.refcount(b) == 1 for b in blocks)
+    assert st.allocator.n_free == st.allocator.num_blocks - 2
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write
+# ---------------------------------------------------------------------------
+def _paint(st, block, value):
+    for j, m in enumerate(st.paged_mask):
+        if m:
+            st.pools[j] = st.pools[j].at[:, block].set(value)
+
+
+def _pool_val(st, block):
+    for j, m in enumerate(st.paged_mask):
+        if m:
+            return float(st.pools[j][0, block, 0, 0, 0])
+    raise AssertionError("no paged leaf")
+
+
+def test_rewind_into_shared_block_cows(setup):
+    cfg, params = setup
+    st = _store(params, cfg)
+    toks = np.arange(8, dtype=np.int32)
+    st.slot_blocks[0] = st.allocator.alloc(2)
+    pub = list(st.slot_blocks[0])
+    _paint(st, pub[0], 1.0)
+    _paint(st, pub[1], 2.0)
+    st.release(0, publish_tokens=toks)
+    assert st.adopt_prefix(1, np.concatenate([toks, [5, 6, 7]])) == 8
+    # spec-style rewind back INTO the shared second block: the next
+    # write lands at position 6, so the block must be copied, not
+    # scribbled over
+    st.rewind(1, 6)
+    nb = st.slot_blocks[1][1]
+    assert nb != pub[1]
+    assert st.cow_copies == 1
+    assert st.allocator.refcount(pub[1]) == 1     # trie's alone again
+    assert _pool_val(st, pub[1]) == 2.0           # sibling content intact
+    assert _pool_val(st, nb) == 2.0               # copy carries the K/V
+
+
+def test_ensure_capacity_cows_shared_write_range(setup):
+    cfg, params = setup
+    st = _store(params, cfg)
+    toks = np.arange(8, dtype=np.int32)
+    st.slot_blocks[0] = st.allocator.alloc(2)
+    pub = list(st.slot_blocks[0])
+    _paint(st, pub[1], 3.0)
+    st.release(0, publish_tokens=toks)
+    st.adopt_prefix(1, np.concatenate([toks, [5, 6, 7]]))
+    # a write window [6, 9] spans the shared block AND grows a fresh one
+    assert st.ensure_capacity(1, 9, write_start=6)
+    assert len(st.slot_blocks[1]) == 3
+    assert st.slot_blocks[1][1] != pub[1] and st.cow_copies == 1
+    assert _pool_val(st, pub[1]) == 3.0
+    # read-only coverage (write_start past the shared cover) never COWs
+    st2_hits = st.cow_copies
+    assert st.ensure_capacity(1, 11, write_start=8)
+    assert st.cow_copies == st2_hits
+
+
+# ---------------------------------------------------------------------------
+# eviction
+# ---------------------------------------------------------------------------
+def test_eviction_lru_and_never_shared(setup):
+    cfg, params = setup
+    st = _store(params, cfg, num_blocks=4, max_len=16)
+    tok_a = np.arange(8, dtype=np.int32)
+    tok_b = np.arange(100, 108, dtype=np.int32)
+    st.slot_blocks[0] = st.allocator.alloc(2)
+    a_blocks = list(st.slot_blocks[0])
+    st.release(0, publish_tokens=tok_a)
+    st.slot_blocks[0] = st.allocator.alloc(2)
+    b_blocks = list(st.slot_blocks[0])
+    st.release(0, publish_tokens=tok_b)
+    assert st.allocator.n_free == 0
+    assert st.reclaimable_blocks == 4            # all trie-only
+    # pin run B in a slot (refcount 2) and touch nothing else: the only
+    # evictable runs are A's
+    assert st.adopt_prefix(1, np.concatenate([tok_b, [9]])) == 8
+    assert st.reclaimable_blocks == 2
+    assert st.can_admit(8, chunk_size=4)         # reclaimable counts as free
+    # allocation under pressure evicts A (LRU, trie-only) — never B
+    got = st._alloc(2)
+    assert set(got) == set(a_blocks)
+    assert all(st.allocator.refcount(b) == 2 for b in b_blocks)
+    assert st.match_prefix(np.concatenate([tok_a, [9]]))[1] == 0
+    assert st.match_prefix(np.concatenate([tok_b, [9]]))[1] == 8
+    assert st.prefix_evictions == 2
+    # a fully-pinned trie cannot satisfy more demand
+    st.slot_blocks[2] = got
+    with pytest.raises(MemoryError):
+        st._alloc(1)
+
+
+def test_eviction_is_lru_ordered(setup):
+    cfg, params = setup
+    st = _store(params, cfg, num_blocks=6, max_len=16)
+    tok_a = np.arange(8, dtype=np.int32)
+    tok_b = np.arange(100, 108, dtype=np.int32)
+    for toks in (tok_a, tok_b):
+        st.slot_blocks[0] = st.allocator.alloc(2)
+        st.release(0, publish_tokens=toks)
+    # touch A after B was published: B becomes the LRU victim
+    st.match_prefix(np.concatenate([tok_a, [9]]))
+    st._alloc(4)                                 # forces 2 evictions
+    assert st.match_prefix(np.concatenate([tok_a, [9]]))[1] == 8
+    assert st.match_prefix(np.concatenate([tok_b, [9]]))[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level identity
+# ---------------------------------------------------------------------------
+def test_engine_prefix_identity_and_stats(setup):
+    cfg, params = setup
+    prompts = _shared_prompts(cfg) + [
+        np.arange(40, 49, dtype=np.int32)]       # one cold request
+    off, s_off, _ = _serve(params, cfg, prompts, prefix_cache=False)
+    on, s_on, eng = _serve(params, cfg, prompts, prefix_cache=True)
+    assert on == off, "prefix sharing changed generations"
+    assert s_on["prefix_hits"] >= 4, s_on
+    assert s_on["prefix_hit_tokens"] >= 4 * 24, s_on
+    assert s_on["prefill_tokens"] < s_off["prefill_tokens"]
+    assert s_off["prefix_hits"] == 0
+    u = eng.store.usage()
+    assert u["peak_in_use"] > 0
+    for k in ("peak_in_use", "shared_blocks", "cow_copies",
+              "blocks_reclaimable", "prefix_blocks"):
+        assert k in u, k
+    snap = eng.snapshot()
+    for k in ("prefix_hits", "prefix_hit_tokens", "shared_blocks",
+              "cow_copies", "peak_in_use"):
+        assert k in snap, k
+    # peak residency with sharing never exceeds the unshared run's
+    assert snap["peak_in_use"] <= len(prompts) * eng.store.blocks_for(
+        max(len(p) for p in prompts) + 6)
+
+
+def test_engine_preemption_of_sharing_request_keeps_sibling_intact(setup):
+    """Overcommitted pool while requests share a prefix: preemptions
+    fire, trie runs are evicted under pressure, and every generation is
+    still bit-identical to the uncontended unshared run."""
+    cfg, params = setup
+    prompts = _shared_prompts(cfg, n=4, shared_len=16, suffix_len=4,
+                              seed=11)
+    base, _, _ = _serve(params, cfg, prompts, prefix_cache=False,
+                        max_len=48)
+    got, stats, eng = _serve(params, cfg, prompts, prefix_cache=True,
+                             max_len=48, num_blocks=10)
+    assert got == base, "preemption under sharing corrupted a sibling"
+    assert stats["preemptions"] > 0, stats
+    assert stats["completed"] == len(prompts)
+    # slots drained; every remaining block reference is the trie's
+    assert all(b == [] for b in eng.store.slot_blocks)
+    assert (eng.store.allocator.n_free + eng.store.prefix_trie.nodes
+            == eng.store.allocator.num_blocks)
+
+
+def test_params_opt_out_skips_adoption_and_publication(setup):
+    cfg, params = setup
+    prompts = _shared_prompts(cfg, n=3, seed=13)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=64, eos_id=-1,
+                      block_size=4, chunk_size=8)
+    opt_out = SamplingParams(max_new_tokens=4, prefix_cache=False)
+    r0 = Request(0, prompts[0].copy(), params=opt_out)
+    eng.submit(r0)
+    eng.run()
+    # nothing published: the warm engine has no runs to hit
+    assert eng.store.prefix_trie.nodes == 0
+    assert eng.store.allocator.n_free == eng.store.allocator.num_blocks
+    r1 = Request(1, prompts[1].copy(),
+                 params=SamplingParams(max_new_tokens=4))
+    eng.submit(r1)
+    eng.run()
+    assert eng.stats["prefix_hits"] == 0         # trie was empty
+    assert eng.store.prefix_trie.nodes > 0       # r1 published
+    # an opted-out request on a WARM trie: no adoption either
+    r2 = Request(2, prompts[2].copy(), params=opt_out)
+    eng.submit(r2)
+    eng.run()
+    assert eng.stats["prefix_hits"] == 0
+    # identity against a cold engine
+    cold, _, _ = _serve(params, cfg, prompts, prefix_cache=False,
+                        n_slots=1, max_new=4)
+    assert [r0.generated, r1.generated, r2.generated] == cold
+
+
+def test_prefix_composes_with_spec_and_host_stride(setup):
+    cfg, params = setup
+    prompts = _shared_prompts(cfg, n=4, shared_len=16, suffix_len=4,
+                              seed=17)
+    base, _, _ = _serve(params, cfg, prompts, prefix_cache=False,
+                        max_new=8)
+    spec, s_spec, _ = _serve(
+        params, cfg, prompts, prefix_cache=True, max_new=8,
+        sampling=SamplingParams(max_new_tokens=8, spec_k=3))
+    assert spec == base, "prefix + spec_k diverged"
+    assert s_spec["prefix_hits"] > 0, s_spec
+    multi, s_multi, _ = _serve(params, cfg, prompts, prefix_cache=True,
+                               max_new=8, host_stride=4)
+    assert multi == base, "prefix + host_stride diverged"
+    assert s_multi["prefix_hits"] > 0, s_multi
+
+
+def test_engine_without_chunk_size_serves_cold(setup):
+    """prefix_cache=True on a one-shot engine is inert (adoption needs
+    the suffix-boundary start only chunked prefill provides): no trie
+    growth, full pool drain, unchanged generations."""
+    cfg, params = setup
+    prompts = _shared_prompts(cfg, n=3, seed=19)
+    got, stats, eng = _serve(params, cfg, prompts, prefix_cache=True,
+                             chunk_size=None)
+    assert not eng.prefix_cache
+    assert stats["prefix_hits"] == 0 and eng.store.prefix_trie.nodes == 0
+    assert eng.store.allocator.n_free == eng.store.allocator.num_blocks
+    base, _, _ = _serve(params, cfg, prompts, prefix_cache=False)
+    assert got == base

@@ -149,8 +149,12 @@ def test_preempt_half_prefilled_rewinds_cleanly(setup):
     token-identical to an unpreempted run."""
     cfg, params = setup
     (long,) = _prompts(cfg, [40], seed=5)
+    # prefix_cache=False: preemption should FREE the blocks outright
+    # (the default would publish them into the prefix trie instead —
+    # covered by tests/test_prefix_cache.py)
     eng = ServeEngine(params, cfg, n_slots=2, max_len=96, eos_id=-1,
-                      block_size=4, num_blocks=24, chunk_size=4)
+                      block_size=4, num_blocks=24, chunk_size=4,
+                      prefix_cache=False)
     req = Request(0, long.copy(), 4)
     eng.submit(req)
     eng.step()
@@ -180,7 +184,8 @@ def test_chunked_pool_pressure_preempts_and_recovers(setup):
                         n_slots=4, block_size=4)
     got, stats, eng = _serve(params, cfg, prompts, chunk_size=4,
                              max_len=96, max_new=5, n_slots=4,
-                             block_size=4, num_blocks=12)
+                             block_size=4, num_blocks=12,
+                             prefix_cache=False)
     assert got == base
     assert stats["preemptions"] > 0, stats
     assert eng.store.allocator.n_free == 12
