@@ -850,6 +850,56 @@ def streaming_latency(arch="qwen3-0.6b", n_requests=8, max_new=12,
     return row
 
 
+def probe_sweep(arch="qwen3-0.6b", n_requests=8, max_new=8, max_len=96,
+                window=None, verbose=True):
+    """Approximate-attention divergence probe (repro.probe) plus the
+    per-variant serving throughput on the staggered ragged trace.
+
+    Per variant: greedy-divergence metrics against the exact baseline
+    (divergence rate, first-divergence positions, per-layer worst
+    |w_variant - w_exact|) and tok/s of the same trace served under
+    that score function.  The exact arm is the bit-identity contract —
+    its divergence MUST be 0.0, which smoke.sh / CI assert."""
+    from repro import probe as probe_mod
+    from repro.core.attn_approx import VARIANTS
+
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    plens = [3 + (7 * i) % 53 for i in range(n_requests)]   # staggered
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    report = probe_mod.run_probe(params, cfg, prompts,
+                                 window=window, max_new_tokens=max_new,
+                                 n_slots=4, max_len=max_len)
+    assert report["variants"]["exact"]["divergence"] == 0.0, \
+        "exact arm diverged from itself — bit-identity contract broken"
+    from repro.serve.params import SamplingParams
+    sp = SamplingParams(max_new_tokens=max_new)
+    for v in VARIANTS:
+        def once():
+            eng = ServeEngine(params, cfg, n_slots=4, max_len=max_len,
+                              eos_id=1, attn_approx=v, attn_window=window)
+            reqs = [Request(i, p.copy(), params=sp)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            eng.run(max_iters=10000)
+            return (time.perf_counter() - t0,
+                    sum(len(r.generated) for r in reqs))
+        once()                                  # warmup: compile
+        wall, toks = min((once() for _ in range(3)), key=lambda r: r[0])
+        report["variants"][v]["tok_s"] = toks / wall
+        if verbose:
+            d = report["variants"][v]
+            worst = max(d.get("score_error", {"-": 0.0}).values())
+            print(f"probe {v:8s}: divergence={d['divergence']:.2f} "
+                  f"mean_first={d['mean_first_divergence']} "
+                  f"max_score_err={worst:.2e} tok/s={d['tok_s']:7.1f}")
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -911,6 +961,11 @@ def main():
     jax.clear_caches()
     prefix = prefix_sweep(arch=args.arch, n_shared=args.prefix_requests,
                           prefix_len=args.prefix_len)
+    print("\napproximate attention (exp-free score functions): greedy "
+          "divergence vs exact + per-variant tok/s:")
+    jax.clear_caches()
+    probe = probe_sweep(arch=args.arch, n_requests=args.requests,
+                        max_new=args.max_new, max_len=args.max_len)
     print("\nstreaming TTFT / inter-token latency (LLM facade):")
     streaming = streaming_latency(arch=args.arch,
                                   n_requests=args.requests,
@@ -928,6 +983,7 @@ def main():
                    "spec_sweep": spec, "chunked_sweep": chunked,
                    "multistep_sweep": multistep,
                    "prefix_sweep": prefix,
+                   "probe_sweep": probe,
                    "streaming": streaming,
                    "latency_vs_max_len": sweep},
                   f, indent=2)

@@ -23,7 +23,11 @@ Sampler heads in one jitted call — are unchanged underneath):
   - prefix sharing (chunked engines): requests with the same system
     prompt attend through ONE set of pool blocks — later arrivals
     prefill only their suffix, and the output is token-identical to
-    ``prefix_cache=False``.
+    ``prefix_cache=False``;
+  - approximate attention (``attn_approx=``): the paged decode path
+    under exp-free score functions (pseudo-softmax 2^x, winner-take-all
+    maxonly — the ``core.attn_approx`` catalog), with the greedy
+    divergence against ``exact`` printed per mode.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -176,6 +180,39 @@ def main():
     assert st["prefix_hits"] >= 4
     assert st["prefill_tokens"] < cold.stats["prefill_tokens"]
     assert cold.stats["prefix_hits"] == 0  # params opt-out really off
+
+    # Approximate attention: the SAME prompts served under exp-free
+    # score functions from the core.attn_approx catalog.  exact is the
+    # bit-identity contract (it IS the engine above, jit cache and
+    # all); pseudo drops the softmax's exp for a bare 2^x; maxonly is
+    # the paper's comparator AS the attention datapath — each token
+    # attends only to its single highest-scoring key.  The divergence
+    # probe reports where each approximation first changes the greedy
+    # stream.
+    base = [o.token_ids for o in llm.generate(
+        prompts, SamplingParams(max_new_tokens=8))]
+    print("\napproximate attention (greedy, same prompts):")
+    for mode in ("exact", "pseudo", "maxonly"):
+        alt = LLM(llm.engine.params, cfg, n_slots=4, max_len=96, eos_id=1,
+                  kv_layout="paged", block_size=16, attn_approx=mode)
+        toks = [o.token_ids for o in alt.generate(
+            prompts, SamplingParams(max_new_tokens=8, attn_approx=mode))]
+        firsts = []
+        for ref, got in zip(base, toks):
+            pos = next((i for i, (a, b) in enumerate(zip(ref, got))
+                        if a != b), None)
+            if pos is None and len(ref) != len(got):
+                pos = min(len(ref), len(got))
+            firsts.append(pos)
+        diverged = [p for p in firsts if p is not None]
+        where = (f"first divergence at token "
+                 f"{[p for p in firsts]}" if diverged
+                 else "streams identical")
+        print(f"  {mode:8s}: {len(diverged)}/{len(base)} requests "
+              f"diverged — {where}")
+        if mode == "exact":
+            assert toks == base, \
+                "attn_approx='exact' must be bit-identical to the default"
 
 
 if __name__ == "__main__":

@@ -237,6 +237,30 @@ else:
           f"tokens (>= 2x), shared-class TTFT p50 "
           f"{ps['off']['ttft_shared_ms_p50']:.0f} -> "
           f"{ps['on']['ttft_shared_ms_p50']:.0f} ms")
+
+pr = bench.get("probe_sweep")
+if not pr:
+    print("BENCH GUARD SKIPPED (probe): no probe_sweep section")
+else:
+    variants = pr["variants"]
+    # the bit-identity contract: the exact arm diffed against itself
+    # must be EXACTLY zero — any drift means an approximate mode leaked
+    # into the default decode path
+    assert variants["exact"]["divergence"] == 0.0, (
+        f"probe_sweep exact arm diverged: "
+        f"{variants['exact']['divergence']} != 0.0 — the attn_approx="
+        "'exact' bit-identity contract is broken")
+    for name in ("base2", "pseudo", "pwl", "maxonly"):
+        assert name in variants, f"probe_sweep missing variant {name!r}"
+        row = variants[name]
+        for k in ("divergence", "diverged_requests", "n_requests",
+                  "first_divergence", "mean_first_divergence"):
+            assert k in row, f"probe_sweep {name} row missing {k!r}"
+        assert 0.0 <= row["divergence"] <= 1.0, (
+            f"probe_sweep {name}: divergence={row['divergence']} "
+            "outside [0, 1]")
+    print("BENCH GUARD OK: probe_sweep exact divergence == 0.0; "
+          "all 4 approximate variants report divergence metrics")
 EOF
 
 echo "== HTTP smoke (SSE frontend: streamed == non-streamed, reduced =="

@@ -68,6 +68,16 @@ class ModelConfig:
     remat: str = "dots"              # none | dots | full
     scan_layers: bool = True
     use_pallas: bool = False
+    # Approximate attention (serving): the score function the PAGED
+    # decode path runs ('exact' | 'base2' | 'pseudo' | 'pwl' |
+    # 'maxonly' — core/attn_approx.py) and an optional sliding-window
+    # mask over the paged kv view.  Static modes: being frozen-dataclass
+    # fields, they key every jitted serving factory automatically.
+    # Distinct from attention_window (an ARCHITECTURE window backed by
+    # ring buffers); attn_window is mask-only — the pool still stores
+    # the full history, so speculation/rewind/prefix sharing compose.
+    attn_approx: str = "exact"
+    attn_window: Optional[int] = None
     # Whether the arch is sub-quadratic in sequence length (long_500k gate).
     @property
     def subquadratic(self) -> bool:

@@ -1,0 +1,201 @@
+"""The approximate-attention score-function catalog.
+
+The paper's reduced unit fires at the LM head — once per token.  The
+attention softmax recurs per layer per token, which is where the related
+work attacks (Samsung's base-2 LUT unit, PWL exp units, pseudo-softmax):
+replace exp/divide in the ATTENTION score path and measure what it does
+to served tokens instead of proving an identity.  This module is the one
+place those score functions are defined; both paged-attention twins
+(``kernels/paged_attention.py`` and ``kernels/ref.py``) and the
+divergence probe (``repro/probe.py``) consume it.
+
+Catalog
+-------
+``exact``    the current online softmax (e^x, exact rescale) — baseline.
+``base2``    e^x as 2^(x*log2e): integer part is a shift, fractional part
+             a 2^P-entry LUT (``core.softmax_variants.base2_exp_raw``,
+             the same simulation the head-unit benchmarks use).
+             Approximates softmax to ~2^-P relative — near-zero token
+             divergence in practice.
+``pseudo``   pseudo-softmax: base 2 OUTRIGHT, 2^x / sum 2^x.  NOT equal
+             to softmax (flatter weights) but order-preserving per
+             score, so the top attention target is unchanged.
+``pwl``      piecewise-linear exp: exact 2^n shift + chord interpolation
+             of 2^v over ``PWL_SEGMENTS`` uniform segments — the
+             adder-only datapath of PWL softmax units.
+``maxonly``  winner-take-all: the output is the V row of the single
+             highest-scoring key (ties -> lowest position).  The paper's
+             comparator taken to its limit — zero exp, zero sum, zero
+             divide; combined with ``window`` it is the comparator over
+             a sliding bus.
+
+Online-carry semantics (shared by both twins)
+---------------------------------------------
+Weights are defined against the GLOBAL max M of the masked scores:
+``w_i = f(s_i - M) / sum_j f(s_j - M)`` with ``f`` the variant's
+``weight_exp``.  The Pallas kernel evaluates ``f`` blockwise at its
+RUNNING max and rescales the carry with the variant's ``carry_scale`` —
+exact e^x (2^x for ``pseudo``), so the approximation error stays
+single-shot per score instead of compounding per block, and paged==ref
+holds to tight tolerances for every variant.  ``maxonly`` is a pure
+comparator carry (no f at all).
+
+Everything here is plain traced jax — no host callbacks — so the score
+functions are closed under ``lax.while_loop`` (the device-resident
+decode loop traces them into its body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softmax_variants import LOG2E, base2_exp_raw
+
+# scores at or below this are treated as masked (both twins mask with
+# -inf or -1e30; the LUT-based f's are not defined at -inf)
+MASK_FLOOR = -1e29
+
+# chord count for the pwl variant: 16 segments keeps the PWL unit
+# hardware-plausible (17-entry endpoint ROM) at ~2e-4 relative error
+PWL_SEGMENTS = 16
+
+BASE2_PRECISION_BITS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnScore:
+    """One catalog entry: what the score function is and when it's safe."""
+    name: str
+    description: str
+    exp_free: bool           # datapath is shift/LUT/compare only (no e^x)
+    order_preserving: bool   # per-score monotone map (top target unchanged)
+    softmax_approx: bool     # approximates the exact softmax weights
+
+
+CATALOG = {
+    s.name: s for s in (
+        AttnScore("exact", "online softmax (e^x, exact rescale)",
+                  exp_free=False, order_preserving=True,
+                  softmax_approx=True),
+        AttnScore("base2", "e^x via shift + 2^P-entry fractional LUT",
+                  exp_free=True, order_preserving=True,
+                  softmax_approx=True),
+        AttnScore("pseudo", "pseudo-softmax: 2^x / sum 2^x (base 2 "
+                            "outright; order-preserving, not softmax)",
+                  exp_free=True, order_preserving=True,
+                  softmax_approx=False),
+        AttnScore("pwl", "piecewise-linear exp: shift + chord-interpolated "
+                         "2^v over uniform segments",
+                  exp_free=True, order_preserving=True,
+                  softmax_approx=True),
+        AttnScore("maxonly", "winner-take-all: V row of the max score "
+                             "(comparator only)",
+                  exp_free=True, order_preserving=True,
+                  softmax_approx=False),
+    )
+}
+
+VARIANTS: Tuple[str, ...] = tuple(CATALOG)
+
+
+def resolve(name: Optional[str], window: Optional[int] = None
+            ) -> Tuple[str, Optional[int]]:
+    """Normalize/validate the (attn_approx, attn_window) pair — the one
+    entry point every surface (ops dispatch, engine, params, CLI) routes
+    through.  Plain Python at trace time (loop-safe)."""
+    name = "exact" if name is None else str(name)
+    if name not in CATALOG:
+        raise ValueError(
+            f"attn_approx={name!r}: expected one of {sorted(CATALOG)}")
+    if window is not None:
+        window = int(window)
+        if window < 1:
+            raise ValueError(
+                f"attn_window={window}: must be >= 1 (the window always "
+                "includes the query's own position) or None for full "
+                "attention")
+    return name, window
+
+
+# ---------------------------------------------------------------------------
+# The score functions: f(d) for d = s - m <= 0, plus the carry rescale
+# ---------------------------------------------------------------------------
+def pwl_exp2_raw(y: jax.Array, segments: int = PWL_SEGMENTS) -> jax.Array:
+    """2^y by exact integer shift + piecewise-linear (chord) interpolation
+    of the fractional part — ``segments`` uniform segments with endpoint
+    values 2^(i/segments) held in a (segments+1)-entry ROM."""
+    n = jnp.floor(y)
+    v = y - n                                       # in [0, 1)
+    idx = jax.lax.broadcasted_iota(
+        jnp.float32, (1, segments + 1), 1).reshape(segments + 1)
+    lut = jnp.exp2(idx / segments)
+    pos = v * segments
+    i = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, segments - 1)
+    t = pos - i.astype(jnp.float32)
+    lo = jnp.take(lut, i)
+    hi = jnp.take(lut, i + 1)
+    return jnp.exp2(n) * (lo + (hi - lo) * t)
+
+
+def pwl_exp_raw(x: jax.Array, segments: int = PWL_SEGMENTS) -> jax.Array:
+    """e^x via the PWL 2^y unit (y = x * log2e)."""
+    return pwl_exp2_raw(x * LOG2E, segments)
+
+
+def weight_exp(d: jax.Array, name: str) -> jax.Array:
+    """The variant's per-score numerator f(d), d = s - m <= 0 and FINITE
+    (callers zero masked lanes outside; the LUT f's are undefined at
+    -inf).  Not valid for 'maxonly' (a comparator, not a weight)."""
+    if name == "exact":
+        return jnp.exp(d)
+    if name == "pseudo":
+        return jnp.exp2(d)
+    if name == "base2":
+        return base2_exp_raw(d, precision_bits=BASE2_PRECISION_BITS)
+    if name == "pwl":
+        return pwl_exp_raw(d)
+    raise ValueError(f"attn_approx={name!r} has no weight function "
+                     f"(expected one of {sorted(set(CATALOG) - {'maxonly'})})")
+
+
+def carry_scale(dm: jax.Array, name: str) -> jax.Array:
+    """The online-carry rescale for a running-max bump dm = m_prev -
+    m_new <= 0.  Exact in the variant's base (2^x for pseudo, e^x
+    otherwise) so blockwise evaluation matches the global-max definition
+    single-shot — see the module docstring."""
+    return jnp.exp2(dm) if name == "pseudo" else jnp.exp(dm)
+
+
+# ---------------------------------------------------------------------------
+# Dense weights (the ref twin + the probe's score-error metric)
+# ---------------------------------------------------------------------------
+def attn_weights(scores: jax.Array, name: str, axis: int = -1) -> jax.Array:
+    """Normalized attention weights over ``axis`` for masked f32 scores
+    (masked lanes at -inf or <= MASK_FLOOR).  The dense single-shot form
+    of the kernel's online carry; ``ref.paged_attention`` routes every
+    non-exact variant through here."""
+    if name == "exact":
+        return jax.nn.softmax(scores, axis=axis)
+    if name == "maxonly":
+        ax = axis % scores.ndim
+        iota = jax.lax.broadcasted_iota(jnp.int32, scores.shape, ax)
+        m = jnp.max(scores, axis=ax, keepdims=True)
+        hit = scores == m
+        first = jnp.min(jnp.where(hit, iota, jnp.iinfo(jnp.int32).max),
+                        axis=ax, keepdims=True)
+        return (iota == first).astype(jnp.float32)
+    live = scores > MASK_FLOOR
+    m = jnp.max(scores, axis=axis, keepdims=True)
+    d = jnp.where(live, scores - m, 0.0)
+    e = jnp.where(live, weight_exp(d, name), 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=axis, keepdims=True), 1e-30)
+
+
+def score_error(scores: jax.Array, name: str, axis: int = -1) -> jax.Array:
+    """Max |w_variant - w_exact| over the whole score tensor — the
+    probe's per-layer weight-error metric."""
+    return jnp.max(jnp.abs(attn_weights(scores, name, axis)
+                           - attn_weights(scores, "exact", axis)))

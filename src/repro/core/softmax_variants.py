@@ -35,7 +35,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-LOG2E = 1.4426950408889634  # log2(e)
+# log2(e) — THE shared base-2 constant: attn_approx.py and the kernels
+# import it from here instead of re-deriving it (one source of truth for
+# every e^x = 2^(x*log2e) rewrite in the repo).
+LOG2E = 1.4426950408889634
 
 
 # ---------------------------------------------------------------------------
@@ -75,10 +78,22 @@ def predict_log_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
 # ---------------------------------------------------------------------------
 # [3] Zhu et al.: base-2, precision-adjustable (P-bit fractional LUT)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("precision_bits",))
-def base2_exp(x: jax.Array, precision_bits: int = 8) -> jax.Array:
-    """e^x approximated as 2^(x*log2e) with int shift + P-bit fractional LUT.
+def base2_frac_lut(precision_bits: int = 8) -> jax.Array:
+    """The 2^P-entry fractional LUT a real base-2 unit holds in ROM:
+    2^(i/size) for i in [0, size).  Built with a 2-D iota so the same
+    helper is usable INSIDE Pallas TPU kernels (1-D iota does not lower
+    there); values are identical to ``exp2(arange(size)/size)``."""
+    size = 1 << precision_bits
+    idx = jax.lax.broadcasted_iota(jnp.float32, (1, size), 1).reshape(size)
+    return jnp.exp2(idx / size)
 
+
+def base2_exp_raw(x: jax.Array, precision_bits: int = 8) -> jax.Array:
+    """Unjitted body of ``base2_exp`` — safe to trace inside Pallas
+    kernels and ``lax.while_loop`` bodies (kernels/paged_attention.py's
+    ``base2`` score function reuses it verbatim).
+
+    e^x approximated as 2^(x*log2e) with int shift + P-bit fractional LUT.
     y = x*log2(e); y = n + v with n integer, v in [0, 1).
     2^n is exact (a shift in hardware); 2^v is read from a 2^P-entry LUT
     indexed by the top P bits of v (nearest-entry quantization).
@@ -87,11 +102,13 @@ def base2_exp(x: jax.Array, precision_bits: int = 8) -> jax.Array:
     n = jnp.floor(y)
     v = y - n  # in [0, 1)
     size = 1 << precision_bits
-    # The LUT a real unit would hold in ROM: 2^(i/size) for i in [0, size).
-    lut = jnp.exp2(jnp.arange(size, dtype=jnp.float32) / size)
+    lut = base2_frac_lut(precision_bits)
     idx = jnp.clip(jnp.round(v * size).astype(jnp.int32), 0, size - 1)
-    frac = lut[idx]
+    frac = jnp.take(lut, idx)
     return jnp.exp2(n) * frac
+
+
+base2_exp = jax.jit(base2_exp_raw, static_argnames=("precision_bits",))
 
 
 @functools.partial(jax.jit, static_argnames=("precision_bits", "axis"))

@@ -40,6 +40,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import attn_approx as attn_approx_mod
 from repro.kernels import fused_argmax_head as _fah
 from repro.kernels import fused_topk_head as _ftk
 from repro.kernels import fused_xent as _fx
@@ -107,7 +108,9 @@ def verify_draft(h, w, cand, *, use_pallas: bool = False,
 
 def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
                     use_pallas: bool = False,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None,
+                    attn_approx: str = "exact",
+                    window: Optional[int] = None):
     """Ragged decode attention straight off a block-paged KV pool.
 
     q (B, Hq, hd) — or (B, T, Hq, hd) for a MULTI-TOKEN (speculative)
@@ -119,12 +122,22 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
     index maps; the per-row position is a scalar-prefetch operand); the
     ref path is the dense decode math over the gathered view —
     token-exact against the dense cache layout.
+
+    ``attn_approx`` picks the score function from the
+    ``core.attn_approx`` catalog ('exact' | 'base2' | 'pseudo' | 'pwl' |
+    'maxonly'); ``window`` caps each query to its last ``window`` kv
+    positions.  Both are STATIC modes resolved here at trace time
+    (loop-safe, like the flag pair) and honored identically by both
+    twins; the defaults are bit-identical to the pre-catalog op.
     """
     use_pallas, interpret = resolve_flags(use_pallas, interpret)
+    attn_approx, window = attn_approx_mod.resolve(attn_approx, window)
     if use_pallas:
         return _pa.paged_attention(q, k_pool, v_pool, block_tables,
-                                   positions, interpret=interpret)
-    return ref.paged_attention(q, k_pool, v_pool, block_tables, positions)
+                                   positions, interpret=interpret,
+                                   attn_approx=attn_approx, window=window)
+    return ref.paged_attention(q, k_pool, v_pool, block_tables, positions,
+                               attn_approx=attn_approx, window=window)
 
 
 def online_softmax(x, *, use_pallas: bool = False,

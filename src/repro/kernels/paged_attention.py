@@ -42,6 +42,18 @@ a short row's extent, and any padded block-table columns) are masked to
 padded tables are safe — a fully-masked block leaves the carry
 untouched.
 
+The score function is a STATIC mode (``attn_approx``, default
+``'exact'``): the approximate-attention catalog
+(``core/attn_approx.py``) swaps the exp sites of the online carry for
+exp-free hardware datapaths — base-2 shift+LUT, pseudo-softmax (2^x
+outright), piecewise-linear exp, or winner-take-all ``maxonly`` (a pure
+comparator carry: the output is the V row of the running max score).
+``window`` adds a sliding-window mask (``kv_pos > positions - window``)
+on top of the causal cap, so ``maxonly`` + ``window`` is the paper's
+comparator over a sliding bus.  Both knobs branch at TRACE time —
+``attn_approx='exact'``/``window=None`` traces the exact same graph as
+before they existed.
+
 Validated in interpret mode against ``ref.paged_attention`` (which is
 itself the dense decode math applied to the gathered view).
 """
@@ -49,18 +61,21 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import attn_approx as approx
+
 _NEG_INF = float("-inf")
 
 
 def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref, *, scale: float, block_size: int,
-            nb: int, g: int):
+            nb: int, g: int, variant: str, window: Optional[int]):
     bi = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -93,15 +108,48 @@ def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     thr = jnp.repeat(pos_row, hq)[:, None]                 # (T*Hq, 1)
     kv_pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = kv_pos <= thr
+    if window is not None:
+        # sliding-window cap: only the last `window` positions (own
+        # position included) stay visible — same convention as
+        # ref.flash_attention's k_idx > q_idx - window
+        valid &= kv_pos > thr - window
     s = jnp.where(valid, s, _NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
     m_cur = jnp.max(s, axis=-1, keepdims=True)         # (T*Hq, 1)
     m_new = jnp.maximum(m_prev, m_cur)
-    # rows with no valid key yet keep m = -inf; guard exp(-inf - -inf)
-    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    p = jnp.exp(jnp.where(valid, s - safe_m, _NEG_INF))
-    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    if variant == "maxonly":
+        # winner-take-all carry: no weights at all — when this block
+        # holds a STRICTLY higher score than the carry so far, reset the
+        # accumulator to the (first) winner's V row; exact ties keep the
+        # earlier (lowest-position) winner, matching argmax semantics.
+        # A fully-masked block has m_cur = -inf and touches nothing.
+        iota = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        hit = valid & (s == m_cur)
+        first = jnp.min(jnp.where(hit, iota, jnp.iinfo(jnp.int32).max),
+                        axis=-1, keepdims=True)
+        take = m_cur > m_prev
+        p = jnp.where(take & (iota == first), 1.0, 0.0)
+        alpha = jnp.where(take, 0.0, 1.0)
+    elif variant == "exact":
+        # rows with no valid key yet keep m = -inf; guard exp(-inf - -inf)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(valid, s - safe_m, _NEG_INF))
+        alpha = jnp.where(jnp.isfinite(m_prev),
+                          jnp.exp(m_prev - safe_m), 0.0)
+    else:
+        # approximate weight, exact rescale: f is evaluated once per
+        # score at this block's running max and the carry is rescaled in
+        # the variant's base (attn_approx.carry_scale), so the LUT/PWL
+        # error stays single-shot per score instead of compounding per
+        # block — paged matches ref's global-max definition tightly.
+        # The LUT f's are undefined at -inf: masked lanes are zeroed
+        # explicitly instead of riding exp(-inf) = 0.
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        d = jnp.where(valid, s - safe_m, 0.0)
+        p = jnp.where(valid, approx.weight_exp(d, variant), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev),
+                          approx.carry_scale(m_prev - safe_m, variant), 0.0)
     l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
     pg = p.reshape(tq, hkv, g, -1).transpose(1, 0, 2, 3)
     pv = jax.lax.dot_general(
@@ -119,14 +167,19 @@ def _kernel(btab_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
             o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "attn_approx", "window"))
 def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
-                    interpret: bool = False):
+                    interpret: bool = False, attn_approx: str = "exact",
+                    window: Optional[int] = None):
     """q: (B, Hq, hd) — or (B, T, Hq, hd) for a multi-token
     (speculative) step; k/v_pool: (num_blocks, bs, Hkv, hd);
     block_tables: (B, nb) int32; positions: (B,) int32 — (B, T) in the
     multi-token form — each query attends over its OWN kv positions <=
     its position (a scalar broadcasts to the whole batch).
+    ``attn_approx`` picks the score function from the
+    ``core.attn_approx`` catalog; ``window`` caps each query to its last
+    ``window`` kv positions.  Both are static (per-mode compilation).
     -> (B, Hq, hd) / (B, T, Hq, hd)."""
     multi = q.ndim == 4
     if not multi:
@@ -142,7 +195,8 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
             (-1, t) if jnp.ndim(positions) == 2 else (-1, 1)), (b, t))
 
     kern = functools.partial(_kernel, scale=scale, block_size=bs,
-                             nb=nb, g=g)
+                             nb=nb, g=g, variant=attn_approx,
+                             window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nb),

@@ -122,7 +122,8 @@ def fused_xent(logits: jax.Array, labels: jax.Array):
 # ---------------------------------------------------------------------------
 # paged_attention: decode attention over a block-paged KV pool
 # ---------------------------------------------------------------------------
-def paged_attention(q, k_pool, v_pool, block_tables, positions):
+def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
+                    attn_approx: str = "exact", window=None):
     """Ragged decode-step attention reading K/V through a block table.
 
     q: (B, Hq, hd) per-row query for the token at ``positions[b]`` — or
@@ -145,6 +146,13 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions):
     0.0): paged and dense decode agree token-exactly, which tests assert
     at engine level.  This oracle is the XLA fallback; the Pallas kernel
     reads the pool blocks in place.
+
+    ``attn_approx`` swaps the softmax for a score function from the
+    ``core.attn_approx`` catalog (dense single-shot form of the kernel's
+    online carry); ``window`` caps each query to its last ``window`` kv
+    positions (own position included), the same convention as
+    ``flash_attention``.  The defaults trace the exact same graph as
+    before these knobs existed.
     """
     multi = q.ndim == 4
     if not multi:
@@ -161,6 +169,16 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions):
     v = v.reshape(b, -1, hkv, hd)
     kv_pos = jnp.arange(k.shape[1])
     mask = kv_pos[None, None, :] <= pos[:, :, None]        # (B, T, S)
+    if window is not None:
+        mask &= kv_pos[None, None, :] > pos[:, :, None] - window
+    if attn_approx == "exact":
+        def weights(scores):
+            return jax.nn.softmax(scores, axis=-1)
+    else:
+        from repro.core import attn_approx as _approx
+
+        def weights(scores):
+            return _approx.attn_weights(scores, attn_approx)
     g = hq // hkv
     if g > 1:
         # grouped-query form, mirroring the dense decode branch
@@ -168,14 +186,14 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions):
         scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) / (hd ** 0.5)
         scores = scores.astype(jnp.float32)
         scores = jnp.where(mask[:, None, None], scores, -1e30)
-        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        probs = weights(scores).astype(dt)
         out = jnp.einsum("bkgts,bskh->btkgh", probs, v).reshape(
             b, t, hq, hd)
         return out if multi else out[:, 0]
     scores = jnp.einsum("bthd,bshd->bhts", q, k) / (hd ** 0.5)
     scores = scores.astype(jnp.float32)
     scores = jnp.where(mask[:, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    probs = weights(scores).astype(dt)
     out = jnp.einsum("bhts,bshd->bthd", probs, v)
     return out if multi else out[:, 0]
 

@@ -102,6 +102,22 @@ def main():
                     action="store_false",
                     help="disable prefix sharing (every request "
                          "prefills and stores its own KV)")
+    from repro.core.attn_approx import VARIANTS
+
+    ap.add_argument("--attn-approx", default=None, choices=list(VARIANTS),
+                    help="approximate-attention score function for the "
+                         "paged decode path: base2 (shift+LUT 2^x), "
+                         "pseudo (2^x / sum 2^x), pwl (piecewise-linear "
+                         "exp), maxonly (winner-take-all comparator — "
+                         "the paper's unit as an attention datapath); "
+                         "default exact")
+    ap.add_argument("--attn-window", type=int, default=None,
+                    help="sliding-window MASK over the paged kv view "
+                         "(decode attends to the last N positions only; "
+                         "KV is still fully stored, so speculation / "
+                         "prefix sharing compose) — with "
+                         "--attn-approx maxonly this is the paper's "
+                         "comparator over a sliding bus")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
                     help="instead of the batch run: start the SSE HTTP "
@@ -134,6 +150,8 @@ def main():
                   token_budget=args.token_budget,
                   host_stride=args.host_stride,
                   prefix_cache=args.prefix_cache,
+                  attn_approx=args.attn_approx,
+                  attn_window=args.attn_window,
                   mesh=mesh, seed=args.seed)
         serve_forever(llm, host=args.http_host, port=args.serve_http)
         return
@@ -145,6 +163,8 @@ def main():
                       token_budget=args.token_budget,
                       host_stride=args.host_stride,
                       prefix_cache=args.prefix_cache,
+                      attn_approx=args.attn_approx,
+                      attn_window=args.attn_window,
                       mesh=mesh, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):

@@ -144,6 +144,14 @@ def _split_heads(x, n_heads, head_dim):
     return x.reshape(*x.shape[:-1], n_heads, head_dim)
 
 
+# Probe hook (repro.probe): when set to a list, the paged-attention
+# branch appends its concrete (q, ck, cv, block_tables, cpm) operands
+# per layer per call.  Only meaningful under jax.disable_jit() — inside
+# a jit trace the values are tracers and the append is a trace-time
+# side effect.  Leave None in production paths.
+_ATTN_TAP: Optional[list] = None
+
+
 def attention(
     p,
     x: jax.Array,
@@ -268,13 +276,17 @@ def attention(
         cv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
         from repro.kernels import ops as kernel_ops
 
+        if _ATTN_TAP is not None:
+            _ATTN_TAP.append((q, ck, cv, block_tables, cpm))
         if T == 1:
             o = kernel_ops.paged_attention(
                 q[:, 0], ck, cv, block_tables, cpm[:, 0],
-                use_pallas=cfg.use_pallas)
+                use_pallas=cfg.use_pallas,
+                attn_approx=cfg.attn_approx, window=cfg.attn_window)
         else:
             o = kernel_ops.paged_attention(
-                q, ck, cv, block_tables, cpm, use_pallas=cfg.use_pallas)
+                q, ck, cv, block_tables, cpm, use_pallas=cfg.use_pallas,
+                attn_approx=cfg.attn_approx, window=cfg.attn_window)
         out = o.reshape(B, T, hq * hd).astype(dt)
         return out @ p["wo"].astype(dt), {"k": ck, "v": cv}
 

@@ -1,0 +1,228 @@
+"""Greedy-divergence probe: HOW WRONG is each approximate score function?
+
+The approximate-attention catalog (``core/attn_approx.py``) swaps the
+paged decode path's softmax for exp-free hardware datapaths.  Kernel
+tests bound the NUMERIC error (paged vs ref per variant); this harness
+measures the error that actually matters for serving: does the greedy
+token stream change, and where?
+
+Two instruments, both over the same prompt set:
+
+  TOKEN DIVERGENCE — run the normal jitted engine once per variant and
+  diff each request's greedy stream against the ``exact`` baseline:
+    divergence             fraction of requests whose stream differs
+    first_divergence       per request: index of the first differing
+                           token (None = identical stream)
+    mean_first_divergence  over diverged requests (higher = the
+                           approximation survives longer)
+  The exact arm diffs against itself and MUST report 0.0 — that is the
+  engine-level bit-identity contract, and CI asserts it.
+
+  SCORE ERROR (``score_probe=True``) — re-run the exact engine under
+  ``jax.disable_jit()`` with the ``models.layers._ATTN_TAP`` hook set,
+  harvesting every paged-attention call's concrete operands.  The
+  masked score matrices are recomputed host-side exactly as the ref
+  kernel builds them, and ``attn_approx.score_error`` reports, per
+  layer, the worst |w_variant - w_exact| over every harvested call —
+  an analytic bound no token diff can provide (tokens can agree by
+  luck; weights cannot).
+
+Report shape (JSON-ready; ``bench_serve.py`` embeds it as
+``probe_sweep`` and ``ServeEngine.probe_report``/GET /v1/stats surface
+it live)::
+
+  {"window": ..., "n_requests": N, "baseline": "exact",
+   "variants": {name: {"divergence": float, "diverged_requests": int,
+                       "n_requests": N, "first_divergence": [...],
+                       "mean_first_divergence": float|None,
+                       "score_error": {"layer_0": float, ...}}}}
+
+CLI (the CI probe step)::
+
+  PYTHONPATH=src python -m repro.probe --arch qwen3-0.6b --smoke \
+      --requests 6 --max-new 10 [--window 32] [--variants pseudo maxonly]
+
+exits non-zero if the exact arm diverges from itself.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attn_approx as approx
+from repro.models import layers, lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.params import SamplingParams
+
+
+def _serve(params, cfg, prompts, sp: SamplingParams, *,
+           attn_approx: str, attn_window: Optional[int],
+           **engine_kwargs):
+    """One engine run; returns the per-request generated streams."""
+    eng = ServeEngine(params, cfg, attn_approx=attn_approx,
+                      attn_window=attn_window, **engine_kwargs)
+    reqs = [Request(i, np.asarray(p, np.int32).copy(), params=sp)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [list(r.generated) for r in reqs]
+
+
+def _divergence(baseline, streams) -> dict:
+    """Token-diff metrics of ``streams`` against the exact ``baseline``."""
+    first = []
+    for ref, got in zip(baseline, streams):
+        pos = next((i for i, (a, b)
+                    in enumerate(zip(ref, got)) if a != b), None)
+        if pos is None and len(ref) != len(got):
+            pos = min(len(ref), len(got))
+        first.append(pos)
+    diverged = [p for p in first if p is not None]
+    return {
+        "divergence": len(diverged) / max(len(first), 1),
+        "diverged_requests": len(diverged),
+        "n_requests": len(first),
+        "first_divergence": first,
+        "mean_first_divergence": (float(np.mean(diverged))
+                                  if diverged else None),
+    }
+
+
+def _masked_scores(q, ck, cv, block_tables, cpm, window):
+    """Rebuild the (B, T, Hq, S) masked f32 score tensor of one
+    harvested paged-attention call, exactly as the ref oracle does
+    (GQA repeat is fine here: weights depend only on scores)."""
+    del cv
+    if q.ndim == 3:
+        q = q[:, None]
+        cpm = np.asarray(cpm).reshape(-1, 1)
+    b, t, hq, hd = q.shape
+    hkv = ck.shape[2]
+    k = jnp.take(ck, block_tables, axis=0).reshape(b, -1, hkv, hd)
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+    scores = jnp.einsum("bthd,bshd->bths", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    pos = jnp.asarray(cpm, jnp.int32).reshape(b, t)
+    kv_pos = jnp.arange(k.shape[1])
+    mask = kv_pos[None, None, :] <= pos[:, :, None]
+    if window is not None:
+        mask &= kv_pos[None, None, :] > pos[:, :, None] - window
+    return jnp.where(mask[:, :, None, :], scores, -1e30)
+
+
+def layer_score_errors(params, cfg, prompts, sp: SamplingParams, *,
+                       variants: Sequence[str],
+                       window: Optional[int],
+                       **engine_kwargs) -> dict:
+    """Per-layer worst-case |w_variant - w_exact| over an EXACT engine
+    run, harvested through the ``layers._ATTN_TAP`` hook under
+    ``jax.disable_jit()`` (inside a jit trace the operands would be
+    tracers).  One tap run scores every variant: the weights are
+    recomputed analytically from the same score matrices."""
+    n_attn = sum(1 for k in lm.layer_types(cfg) if k == "attn") or 1
+    tap: list = []
+    layers._ATTN_TAP = tap
+    try:
+        with jax.disable_jit():
+            _serve(params, cfg, prompts, sp, attn_approx="exact",
+                   attn_window=window, **engine_kwargs)
+    finally:
+        layers._ATTN_TAP = None
+    worst = {v: {} for v in variants}
+    for i, (q, ck, cv, bt, cpm) in enumerate(tap):
+        scores = _masked_scores(np.asarray(q), np.asarray(ck),
+                                np.asarray(cv), np.asarray(bt),
+                                np.asarray(cpm), window)
+        layer = f"layer_{i % n_attn}"
+        for v in variants:
+            err = float(approx.score_error(scores, v))
+            worst[v][layer] = max(worst[v].get(layer, 0.0), err)
+    return worst
+
+
+def run_probe(params, cfg, prompts, *,
+              variants: Sequence[str] = approx.VARIANTS,
+              window: Optional[int] = None,
+              max_new_tokens: int = 16,
+              score_probe: bool = True,
+              sampling: Optional[SamplingParams] = None,
+              **engine_kwargs) -> dict:
+    """Serve ``prompts`` once per variant and report greedy divergence
+    against the exact baseline (plus per-layer score error when
+    ``score_probe``).  ``engine_kwargs`` pass through to ``ServeEngine``
+    (n_slots, max_len, spec/chunk/stride knobs...); ``window`` applies
+    to every arm including the baseline, so the report isolates the
+    SCORE FUNCTION's effect at that window."""
+    variants = list(variants)
+    if "exact" not in variants:
+        variants = ["exact"] + variants
+    sp = sampling if sampling is not None \
+        else SamplingParams(max_new_tokens=max_new_tokens)
+    baseline = _serve(params, cfg, prompts, sp, attn_approx="exact",
+                      attn_window=window, **engine_kwargs)
+    report = {"window": window, "n_requests": len(prompts),
+              "baseline": "exact", "variants": {}}
+    for v in variants:
+        streams = baseline if v == "exact" else _serve(
+            params, cfg, prompts, sp, attn_approx=v,
+            attn_window=window, **engine_kwargs)
+        report["variants"][v] = _divergence(baseline, streams)
+    if score_probe:
+        score_vars = [v for v in variants if v != "exact"]
+        if score_vars:
+            errs = layer_score_errors(params, cfg, prompts, sp,
+                                      variants=score_vars, window=window,
+                                      **engine_kwargs)
+            for v, per_layer in errs.items():
+                report["variants"][v]["score_error"] = per_layer
+    return report
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from repro.configs import get_config, smoke_config
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--variants", nargs="*", default=list(approx.VARIANTS))
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--no-score-probe", dest="score_probe",
+                    action="store_false", default=True)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 24))).astype(np.int32)
+               for _ in range(args.requests)]
+    report = run_probe(params, cfg, prompts, variants=args.variants,
+                       window=args.window, max_new_tokens=args.max_new,
+                       score_probe=args.score_probe,
+                       n_slots=args.slots, max_len=args.max_len)
+    print(json.dumps(report, indent=2))
+    exact = report["variants"]["exact"]
+    if exact["divergence"] != 0.0:
+        print("FAIL: exact arm diverged from itself — the engine-level "
+              "bit-identity contract is broken")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -65,7 +65,9 @@ class LLM:
 
     def __init__(self, params, cfg, **engine_kwargs):
         self.engine = ServeEngine(params, cfg, **engine_kwargs)
-        self.cfg = cfg
+        # the engine may have resolved mode kwargs (attn_approx/
+        # attn_window) into a replaced cfg — mirror ITS view
+        self.cfg = self.engine.cfg
         self._lock = threading.RLock()
         self._rids = itertools.count()
         self._queues: dict = {}            # rid -> per-stream chunk queue

@@ -324,7 +324,23 @@ class ServeEngine:
                  drafter=None, chunk_size: Optional[int] = None,
                  token_budget: Optional[int] = None,
                  host_stride: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 attn_approx: Optional[str] = None,
+                 attn_window: Optional[int] = None):
+        # Approximate attention: the kwargs are a convenience over the
+        # ModelConfig fields (sentinel None = keep whatever the caller's
+        # cfg says, so a cfg already carrying a mode isn't clobbered).
+        # Being frozen-dataclass fields, the modes key every jitted
+        # factory downstream automatically; 'exact' + None replace()s to
+        # an EQUAL cfg, so the default engine shares jit caches — and
+        # outputs — bit-identically with a pre-catalog engine.
+        if attn_approx is not None or attn_window is not None:
+            from repro.core import attn_approx as approx
+            mode, win = approx.resolve(
+                attn_approx if attn_approx is not None else cfg.attn_approx,
+                attn_window if attn_window is not None else cfg.attn_window)
+            cfg = dataclasses.replace(cfg, attn_approx=mode,
+                                      attn_window=win)
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -368,6 +384,19 @@ class ServeEngine:
         self.store = PagedKVStore(
             params, cfg, n_slots=n_slots, max_len=max_len,
             block_size=block_size, num_blocks=num_blocks, layout=kv_layout)
+        # the approximate score functions / mask window live in the
+        # PAGED decode path only — on a dense/ring layout the knob would
+        # be silently ignored, which is worse than refusing.
+        if (cfg.attn_approx != "exact" or cfg.attn_window is not None) \
+                and not self.store.any_paged:
+            raise ValueError(
+                f"attn_approx={cfg.attn_approx!r} / attn_window="
+                f"{cfg.attn_window!r} need the paged decode path; "
+                f"kv_layout={kv_layout!r} on this config has no paged "
+                "layers, so the mode would never run")
+        # repro.probe.run_probe parks its latest divergence report here;
+        # snapshot() (and GET /v1/stats) surfaces it as 'attn_probe'.
+        self.probe_report: Optional[dict] = None
         # chunked prefill rides the same multi-token fused step as
         # speculation (repeated-padding windows, position-masked pool
         # scatters), so it carries the same capability gate — plus a
@@ -474,6 +503,10 @@ class ServeEngine:
         s = dict(self.stats)
         s["queue_depth"] = len(self.queue)
         s["active_slots"] = sum(sl is not None for sl in self.slots)
+        s["attn_approx"] = self.cfg.attn_approx
+        s["attn_window"] = self.cfg.attn_window
+        if self.probe_report is not None:
+            s["attn_probe"] = self.probe_report
         s["tokens_per_dispatch"] = (
             s["emitted_tokens"] / max(s["host_syncs"], 1))
         s["cow_copies"] = self.store.cow_copies
@@ -509,6 +542,17 @@ class ServeEngine:
             req.sampler.validate(self.cfg)
         if req.sampler.needs_mesh and self.mesh is None:
             raise ValueError(f"{req.sampler} requires an engine mesh=")
+        if req.params.attn_approx is not None \
+                and req.params.attn_approx != self.cfg.attn_approx:
+            # attention mode is engine-wide (ONE fused step serves every
+            # slot) — a per-request switch would need per-mode step
+            # compilation and batch splitting.  The param is a contract
+            # check, not a dispatch knob.
+            raise ValueError(
+                f"params.attn_approx={req.params.attn_approx!r} but this "
+                f"engine runs attn_approx={self.cfg.attn_approx!r}; "
+                "attention mode is engine-wide — construct the engine "
+                "with attn_approx= (or drop the param to accept any)")
         if self.host_stride is not None:
             if req.params.spec_k > 0:
                 raise ValueError(

@@ -50,6 +50,14 @@ caller attaches to a request — and the single thing
                     token, identical across strides; ``n_candidates``
                     is rejected there (the k-winner bus is consumed on
                     device).
+  attn_approx       declares the approximate-attention score function
+                    this request was written for ('exact' | 'base2' |
+                    'pseudo' | 'pwl' | 'maxonly' — the
+                    ``core.attn_approx`` catalog).  Attention mode is
+                    ENGINE-wide (one fused step serves every slot), so
+                    this is an assertion, not a switch: submit raises if
+                    it names a different mode than the engine runs.
+                    None accepts whatever the engine is configured with.
   prefix_cache      opt-out of PREFIX SHARING for this request (engines
                     with ``chunk_size`` set share whole KV blocks across
                     requests with a common prompt prefix).  False means
@@ -106,9 +114,16 @@ class SamplingParams:
     n_candidates: int = 0
     spec_k: int = 0
     prefix_cache: bool = True
+    attn_approx: Optional[str] = None
 
     def __post_init__(self):
         object.__setattr__(self, "stop", _normalize_stop(self.stop))
+        if self.attn_approx is not None:
+            from repro.core.attn_approx import CATALOG
+            if self.attn_approx not in CATALOG:
+                raise ValueError(
+                    f"attn_approx={self.attn_approx!r}: unknown score "
+                    f"function (choose from {sorted(CATALOG)})")
         if self.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens={self.max_new_tokens}: must be >= 1")

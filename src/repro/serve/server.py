@@ -52,7 +52,8 @@ from repro.serve.api import LLM
 from repro.serve.params import SamplingParams
 
 _PARAM_KEYS = ("max_new_tokens", "temperature", "top_k", "seed", "stop",
-               "head_mode", "n_candidates", "spec_k", "prefix_cache")
+               "head_mode", "n_candidates", "spec_k", "prefix_cache",
+               "attn_approx")
 
 
 def params_from_json(body: dict) -> SamplingParams:

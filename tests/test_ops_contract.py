@@ -1,0 +1,121 @@
+"""Contract: EVERY public ops.py entry routes through ``resolve_flags``.
+
+``kernels/ops.py`` exists to normalize the (use_pallas, interpret) pair
+in exactly one place — a new entry that hand-rolls its own flag logic
+(or forgets interpret-mode auto-detection entirely) silently falls back
+to the interpreter on TPU or runs the ref twin with a dead flag, the
+precise bugs the resolver was built to kill.  This test makes the
+contract structural:
+
+  - an INVENTORY check scans ops.py's source for public ``def``s and
+    fails if one exists without a registered call case here (adding an
+    op forces adding its contract case);
+  - each case invokes the entry with minimal arguments under a spying
+    ``resolve_flags`` and asserts the spy fired;
+  - ``paged_attention`` additionally must route its (attn_approx,
+    window) pair through ``core.attn_approx.resolve`` — the analogous
+    single normalization point for the approximate-attention modes.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+
+def _mats(rng, b=2, d=8, v=16):
+    h = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32)
+    return h, w
+
+
+def _paged_args(rng):
+    q = jnp.asarray(rng.normal(size=(2, 4, 8)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(4, 4, 2, 8)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(4, 4, 2, 8)), jnp.float32)
+    bt = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    pos = jnp.asarray([3, 6], jnp.int32)
+    return q, kp, vp, bt, pos
+
+
+# entry name -> thunk invoking it with minimal valid arguments.  The
+# softmax_xent case uses the POSITIONAL form its custom_vjp
+# nondiff_argnums demand.
+def _entries():
+    rng = np.random.default_rng(0)
+    h, w = _mats(rng)
+    h3 = jnp.asarray(rng.normal(size=(2, 3, 8)), jnp.float32)
+    cand = jnp.asarray([[1, -1], [2, 3]], jnp.int32)
+    x = jnp.asarray(rng.normal(size=(2, 16)), jnp.float32)
+    labels = jnp.asarray([1, 5], jnp.int32)
+    pa = _paged_args(rng)
+    return {
+        "fused_argmax_head": lambda: ops.fused_argmax_head(h, w),
+        "fused_argmax_head_with_value":
+            lambda: ops.fused_argmax_head_with_value(h, w),
+        "fused_topk_head": lambda: ops.fused_topk_head(h, w, 3),
+        "verify_draft": lambda: ops.verify_draft(h3, w, cand),
+        "paged_attention": lambda: ops.paged_attention(*pa),
+        "online_softmax": lambda: ops.online_softmax(x),
+        "softmax_stats": lambda: ops.softmax_stats(x),
+        "softmax_xent": lambda: ops.softmax_xent(x, labels, False, True),
+    }
+
+
+def test_inventory_is_complete():
+    """Every public def in ops.py has a contract case registered here
+    (so new entries cannot dodge the resolver silently)."""
+    import inspect
+
+    src = inspect.getsource(ops)
+    public = {m for m in re.findall(r"^def (\w+)\(", src, re.M)
+              if not m.startswith("_")}
+    public |= {m for m in re.findall(r"^def (\w+)\(", src, re.M)
+               if m == "softmax_xent"}
+    # softmax_xent is decorated (custom_vjp) but still a public def
+    expected = set(_entries()) | {"resolve_flags"}
+    assert public == expected, (
+        f"ops.py public defs {sorted(public)} != contract inventory "
+        f"{sorted(expected)} — register a resolve_flags contract case "
+        "for every new entry")
+
+
+@pytest.mark.parametrize("name", sorted(_entries()))
+def test_entry_routes_through_resolve_flags(name, monkeypatch):
+    calls = []
+    orig = ops.resolve_flags
+
+    def spy(use_pallas, interpret):
+        calls.append((use_pallas, interpret))
+        return orig(use_pallas, interpret)
+
+    monkeypatch.setattr(ops, "resolve_flags", spy)
+    out = _entries()[name]()
+    jax.block_until_ready(out)
+    assert calls, f"ops.{name} never called resolve_flags"
+
+
+def test_paged_attention_routes_through_attn_resolve(monkeypatch):
+    """The approximate-attention analogue: (attn_approx, window) is
+    normalized by core.attn_approx.resolve inside the ops dispatch."""
+    from repro.core import attn_approx as approx_mod
+
+    calls = []
+    orig = approx_mod.resolve
+
+    def spy(name, window=None):
+        calls.append((name, window))
+        return orig(name, window)
+
+    monkeypatch.setattr(ops.attn_approx_mod, "resolve", spy)
+    rng = np.random.default_rng(1)
+    out = ops.paged_attention(*_paged_args(rng), attn_approx="pseudo",
+                              window=4)
+    jax.block_until_ready(out)
+    assert calls == [("pseudo", 4)]
+    # and invalid modes die in the resolver, not deep in a trace
+    with pytest.raises(ValueError):
+        ops.paged_attention(*_paged_args(rng), attn_approx="bogus")
