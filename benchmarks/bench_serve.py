@@ -900,6 +900,117 @@ def probe_sweep(arch="qwen3-0.6b", n_requests=8, max_new=8, max_len=96,
     return report
 
 
+def tp_sweep(arch="qwen3-0.6b", tps=(1, 2, 4, 8), replica_counts=(1, 2),
+             n_requests=12, max_new=16, n_slots=4, max_len=128,
+             verbose=True):
+    """Tensor-parallel / multi-replica serving sweep: tok/s across TP
+    degree x replica count on the ragged mixed-sampler trace, with
+    token identity asserted against the TP=1 single-replica reference
+    at EVERY point.
+
+    Each point builds a ``serve.router.Router`` of R replicas, each an
+    engine whose trunk is sharded over a (1, TP) 'model' mesh (Megatron
+    column/row weights, head-wise paged KV pools) with the vocab-sharded
+    comparator head — the only cross-shard traffic at the head is the
+    (val, idx) combine.  The trace mixes greedy / top-k-bus / Gumbel-max
+    rows with EXPLICIT per-request seeds (so sampled streams are a pure
+    function of the request, not of which replica served it), a
+    probe-derived stop sequence on request 0 and a probe-derived eos
+    token on request 1 — sharding and replication change WHERE work
+    runs, never which tokens come out.
+
+    Points needing more devices than the host exposes are recorded as
+    skipped (run under XLA_FLAGS=--xla_force_host_platform_device_count
+    =8 to cover TP up to 8); tok/s on forced host devices measures
+    dispatch overhead, not real parallel speedup.
+    """
+    from repro.serve.params import SamplingParams
+    from repro.serve.router import Router
+
+    cfg = smoke_config(ARCHS[arch])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    plens = [3 + (7 * i) % 53 for i in range(n_requests)]   # staggered
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+
+    def sp(i, stop=()):
+        # rows cycle greedy / top-k bus / Gumbel-max; explicit seeds
+        kind = i % 3
+        return SamplingParams(
+            max_new_tokens=max_new,
+            top_k=4 if kind == 1 else 1,
+            temperature=0.8 if kind == 1 else (0.7 if kind == 2 else 1.0),
+            head_mode="temperature" if kind == 2 else None,
+            seed=7000 + i, stop=stop if i == 0 else ())
+
+    def serve(tp, replicas, *, stop=(), eos_id=1):
+        router = Router(params, cfg, replicas=replicas,
+                        tp=tp if tp > 1 else None, n_slots=n_slots,
+                        max_len=max_len, eos_id=eos_id, kv_layout="paged")
+        plist = [sp(i, stop) for i in range(n_requests)]
+        t0 = time.perf_counter()
+        outs = router.generate([p.copy() for p in prompts], plist)
+        wall = time.perf_counter() - t0
+        toks = sum(len(o.token_ids) for o in outs)
+        stats = router.stats
+        return dict(wall=wall, tokens=toks, tok_s=toks / wall,
+                    emitted_tokens=int(stats["emitted_tokens"]),
+                    decode_steps=int(stats["decode_steps"]),
+                    routed=[r.served for r in router.replicas],
+                    gens=[list(o.token_ids) for o in outs],
+                    reasons=[o.finish_reason for o in outs])
+
+    n_dev = len(jax.devices())
+    # probe at the reference point, then derive a stop sequence and eos
+    # token FROM the generations so both finish paths fire mid-stream
+    probe = serve(1, 1, eos_id=-1)
+    g0, g1 = probe["gens"][0], probe["gens"][1]
+    stop = tuple(int(t) for t in g0[3:5])
+    eos_tok = next((int(t) for t in g1[4:]
+                    if t not in g1[:4] and t not in g0[:5]
+                    and t not in stop), -1)
+    serve(1, 1, stop=stop, eos_id=eos_tok)         # warmup (early-stop
+    ref = serve(1, 1, stop=stop, eos_id=eos_tok)   # shapes compile here)
+    assert "stop" in ref["reasons"], ref["reasons"]
+    rows, skipped = [], []
+    for tp in tps:
+        for rc in replica_counts:
+            if tp > n_dev:
+                skipped.append({"tp": tp, "replicas": rc,
+                                "reason": f"needs {tp} devices, "
+                                          f"{n_dev} visible"})
+                continue
+            if tp == 1 and rc == 1:
+                r = dict(ref)
+            else:
+                serve(tp, rc, stop=stop, eos_id=eos_tok)   # warmup
+                r = serve(tp, rc, stop=stop, eos_id=eos_tok)
+            # THE acceptance identity: sharding the trunk / replicating
+            # the engine never changes the token streams
+            assert r["gens"] == ref["gens"], \
+                f"tp={tp} replicas={rc}: generations != tp=1 reference"
+            assert r["reasons"] == ref["reasons"], \
+                f"tp={tp} replicas={rc}: finish reasons != reference"
+            r.pop("gens")
+            r.pop("reasons")
+            r.update(tp=tp, replicas=rc, identity=True)
+            rows.append(r)
+            if verbose:
+                print(f"tp={tp} replicas={rc}  {r['tok_s']:7.1f} tok/s  "
+                      f"routed={r['routed']}  "
+                      f"decode_steps={r['decode_steps']}  "
+                      f"(outputs identical to tp=1 x1)")
+    if skipped and verbose:
+        for s in skipped:
+            print(f"tp={s['tp']} replicas={s['replicas']}  SKIPPED "
+                  f"({s['reason']})")
+    return dict(n_requests=n_requests, n_slots=n_slots, max_new=max_new,
+                prompt_lens=plens, stop=[int(t) for t in stop],
+                eos_id=int(eos_tok), n_devices=n_dev, rows=rows,
+                skipped=skipped)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -927,6 +1038,14 @@ def main():
     ap.add_argument("--prefix-len", type=int, default=512,
                     help="shared system-prompt length for the prefix-"
                          "sharing sweep")
+    ap.add_argument("--tps", type=int, nargs="+", default=[1, 2, 4, 8],
+                    help="tensor-parallel degrees for the tp sweep "
+                         "(points needing more devices than visible are "
+                         "recorded as skipped; set XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=8 to cover them all)")
+    ap.add_argument("--replica-counts", type=int, nargs="+",
+                    default=[1, 2],
+                    help="router replica counts crossed with --tps")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     rows = run(arch=args.arch, slot_counts=tuple(args.slots),
@@ -966,6 +1085,11 @@ def main():
     jax.clear_caches()
     probe = probe_sweep(arch=args.arch, n_requests=args.requests,
                         max_new=args.max_new, max_len=args.max_len)
+    print("\ntensor-parallel serving (sharded trunk + comparator head, "
+          "router replicas):")
+    jax.clear_caches()
+    tp = tp_sweep(arch=args.arch, tps=tuple(args.tps),
+                  replica_counts=tuple(args.replica_counts))
     print("\nstreaming TTFT / inter-token latency (LLM facade):")
     streaming = streaming_latency(arch=args.arch,
                                   n_requests=args.requests,
@@ -984,6 +1108,7 @@ def main():
                    "multistep_sweep": multistep,
                    "prefix_sweep": prefix,
                    "probe_sweep": probe,
+                   "tp_sweep": tp,
                    "streaming": streaming,
                    "latency_vs_max_len": sweep},
                   f, indent=2)

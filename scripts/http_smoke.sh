@@ -8,7 +8,11 @@
 #   - /healthz answers 200 with ok:true (engine liveness),
 #   - unknown paths 404 with a JSON error body (never empty),
 #   - /v1/stats reports decode_steps == iterations (one fused ragged
-#     decode call per engine iteration survives the network frontend).
+#     decode call per engine iteration survives the network frontend),
+#   - the server runs a 2-replica Router fleet and the /v1/stats
+#     aggregate obeys the merge contract: every summed counter equals
+#     the sum over the per-replica breakdown (emitted_tokens checked
+#     explicitly — the invariant serve/router.py documents).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -18,7 +22,7 @@ BASE="http://127.0.0.1:$PORT"
 TMP="$(mktemp -d)"
 
 python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-    --serve-http "$PORT" --slots 2 --max-len 64 &
+    --serve-http "$PORT" --slots 2 --max-len 64 --replicas 2 &
 SRV=$!
 trap 'kill "$SRV" 2>/dev/null || true; rm -rf "$TMP"' EXIT
 
@@ -68,7 +72,22 @@ assert soft["token_ids"] == full["token_ids"], \
     f"Theorem 1 violated over HTTP: {soft['token_ids']} != {full['token_ids']}"
 assert spec["token_ids"] == full["token_ids"], \
     f"speculative != plain greedy over HTTP: {spec['token_ids']}"
-stats = json.load(open(f"{tmp}/stats.json"))["engine"]
+payload = json.load(open(f"{tmp}/stats.json"))
+stats = payload["engine"]
+# the Router aggregate contract: counters SUM over the per-replica
+# breakdown — emitted_tokens is the canonical check (plus a sweep of
+# the other summed counters), peak_in_use is a MAX so it must equal
+# SOME replica's peak, never exceed all of them
+reps = payload["replicas"]
+assert len(reps) == 2, f"expected a 2-replica fleet: {len(reps)}"
+for k in ("emitted_tokens", "decode_steps", "iterations", "prefills",
+          "completed", "host_syncs", "drafted", "accepted"):
+    total = sum(r["engine"][k] for r in reps)
+    assert stats[k] == total, (k, stats[k], total)
+assert stats["peak_in_use"] in [r["engine"]["peak_in_use"] for r in reps]
+assert payload["kv"]["num_blocks"] == \
+    sum(r["kv"]["num_blocks"] for r in reps)
+assert all(r["healthy"] and not r["draining"] for r in reps), reps
 assert stats["decode_steps"] == stats["iterations"], stats
 assert stats["accepted"] > 0 and stats["acceptance_rate"] > 0, stats
 # the dispatch-amortization counters (host_stride lives on these) are
@@ -83,10 +102,12 @@ tpd = stats["tokens_per_dispatch"]
 assert tpd > 0, stats
 assert abs(tpd - stats["emitted_tokens"] / stats["host_syncs"]) < 1e-9, \
     stats
-print(f"HTTP SMOKE OK: {len(streamed)} streamed tokens == non-streamed, "
+print(f"HTTP SMOKE OK ({len(reps)} replicas): "
+      f"{len(streamed)} streamed tokens == non-streamed, "
       f"reduced == softmax == speculative, healthz ok, 404s JSON, "
       f"decode_steps == iterations ({stats['decode_steps']}), "
       f"host_syncs == prefills + decode_steps ({stats['host_syncs']}, "
       f"{tpd:.2f} tok/dispatch), "
-      f"acceptance {stats['acceptance_rate']:.2f}")
+      f"acceptance {stats['acceptance_rate']:.2f}, "
+      f"emitted_tokens {stats['emitted_tokens']} == sum over replicas")
 EOF

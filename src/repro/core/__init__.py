@@ -7,6 +7,8 @@ from repro.core.reduced_softmax import (
     reduced_softmax_predict,
     reduced_topk,
     sharded_reduced_head,
+    sharded_reduced_topk,
+    sharded_verify_draft,
     topk_sample,
     unit_op_counts,
 )

@@ -238,6 +238,104 @@ def sharded_reduced_head(
     )(h, w)
 
 
+def _merge_topk_tables(vals: jax.Array, idxs: jax.Array, k: int):
+    """Exact top-k over per-shard candidate tables ``(..., M)``.
+
+    ``k`` selection passes of the (val, idx) combine — values descending,
+    lowest GLOBAL index among equal values — so the merged bus matches
+    ``reduced_topk`` on the unsharded logits bit-for-bit.  Entries are
+    retired by their (unique) global index, never by value, so duplicate
+    values across shards survive as distinct candidates.
+    """
+    out_v, out_i = [], []
+    for _ in range(k):
+        idx, val = _combine_val_idx(vals, idxs, axis=-1)
+        out_v.append(val)
+        out_i.append(idx)
+        vals = jnp.where(idxs == idx[..., None], -jnp.inf, vals)
+    return jnp.stack(out_v, axis=-1), jnp.stack(out_i, axis=-1)
+
+
+def sharded_reduced_topk(
+    h: jax.Array,
+    w: jax.Array,
+    k: int,
+    mesh: jax.sharding.Mesh,
+    *,
+    shard_axis: str = "model",
+    data_axes: tuple = ("data",),
+    use_pallas: bool = False,
+):
+    """The k-winner comparator bus on a vocab-sharded head.
+
+    Each shard runs the fused top-k over its own vocab slice (indices
+    offset to GLOBAL ids), then a ``(val, idx)`` table of k pairs per
+    shard — O(rows * n_shards * k), never O(V) — crosses the mesh and a
+    k-pass combine picks the global winners.  Any global top-k element
+    is in its shard's local top-k, and local ties already surface
+    lowest-index-first, so the merge is exact: (vals (B, k) f32,
+    idxs (B, k) i32) identical to ``fused_reduced_topk`` unsharded.
+    """
+    in_specs = (P(*data_axes, None), P(None, shard_axis))
+    out_specs = (P(*data_axes, None), P(*data_axes, None))
+
+    def local_fn(h_l, w_l):
+        shard_id = jax.lax.axis_index(shard_axis)
+        v_local = w_l.shape[-1]
+        kk = min(k, v_local)
+        vals_l, idxs_l = fused_reduced_topk(h_l, w_l, kk,
+                                            use_pallas=use_pallas)
+        idxs_l = idxs_l.astype(jnp.int32) + shard_id * v_local
+        if kk < k:
+            # a shard narrower than k pads with -inf sentinels at unique
+            # out-of-vocab indices: never selected while any real
+            # candidate remains, harmless to retire.
+            pad = k - kk
+            n_shards = mesh.shape[shard_axis]
+            base = v_local * n_shards + shard_id * pad
+            vals_l = jnp.pad(vals_l, ((0, 0), (0, pad)),
+                             constant_values=-jnp.inf)
+            idxs_l = jnp.concatenate(
+                [idxs_l, jnp.broadcast_to(
+                    base + jnp.arange(pad, dtype=jnp.int32),
+                    (idxs_l.shape[0], pad))], axis=-1)
+        vals = jax.lax.all_gather(vals_l, shard_axis, axis=-1, tiled=True)
+        idxs = jax.lax.all_gather(idxs_l, shard_axis, axis=-1, tiled=True)
+        return _merge_topk_tables(vals, idxs, k)
+
+    return compat.shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    )(h, w)
+
+
+def sharded_verify_draft(
+    h: jax.Array,
+    w: jax.Array,
+    cand: jax.Array,
+    mesh: jax.sharding.Mesh,
+    *,
+    shard_axis: str = "model",
+    use_pallas: bool = False,
+):
+    """Speculative-decoding verification on a vocab-sharded head.
+
+    Same contract as ``kernels.ops.verify_draft`` — h (B, T, D), w
+    (D, V), cand (B, T-1) -1-padded draft ids -> (ids (B, T) i32,
+    accept (B,) i32) — but each of the B*T per-position argmaxes runs
+    as the per-shard comparator + (val, idx) combine, so the verify
+    unit's cross-shard traffic is one pair per position per shard, not
+    a logit row.  The accept rule is the ref path's verbatim.
+    """
+    b, t, d = h.shape
+    ids = sharded_reduced_head(
+        h.reshape(b * t, d), w, mesh, shard_axis=shard_axis,
+        data_axes=(), use_pallas=use_pallas,
+    ).reshape(b, t).astype(jnp.int32)
+    ok = (ids[:, : t - 1] == cand).astype(jnp.int32)
+    accept = jnp.sum(jnp.cumprod(ok, axis=-1), axis=-1).astype(jnp.int32)
+    return ids, accept
+
+
 # ---------------------------------------------------------------------------
 # Head-unit registry: how many ops each unit spends per k-class decision.
 # Used by benchmarks/bench_head_units.py for the paper's cost claim.

@@ -38,6 +38,43 @@ from repro.serve import sampler as sampler_mod
 from repro.serve.engine import Request, ServeEngine
 
 
+def _run_batch_router(args, cfg, params, engine_kw):
+    """The batch run over a multi-replica Router: same trace as the
+    single-engine path, routed by prefix affinity / least-load, served
+    to completion with inline round-robin stepping, aggregate stats
+    printed with the per-replica request split."""
+    from repro.serve.params import SamplingParams
+    from repro.serve.router import Router
+
+    router = Router(params, cfg, replicas=args.replicas, tp=args.tp,
+                    **engine_kw)
+    rng = np.random.default_rng(args.seed)
+    prompts, plist = [], []
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        prompts.append(rng.integers(0, cfg.vocab_size,
+                                    plen).astype(np.int32))
+        # explicit per-request seed: the facade's (engine seed, rid)
+        # default depends on which replica got the request, so sampled
+        # streams would vary with routing — pinning the seed makes the
+        # trace reproducible whatever the replica split.
+        plist.append(SamplingParams(max_new_tokens=args.max_new,
+                                    spec_k=args.spec_k, top_k=args.top_k,
+                                    temperature=args.temperature,
+                                    head_mode=args.head_mode,
+                                    seed=args.seed * 100003 + rid))
+    t0 = time.perf_counter()
+    outs = router.generate(prompts, plist)
+    dt = time.perf_counter() - t0
+    stats = router.stats
+    split = "/".join(str(r.served) for r in router.replicas)
+    toks = sum(len(o.token_ids) for o in outs)
+    print(f"replicas={args.replicas} tp={args.tp or 1} "
+          f"routed={split} served={stats['completed']} "
+          f"tokens={toks} decode_steps={stats['decode_steps']} "
+          f"preempt={stats['preemptions']} wall={dt:.2f}s")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -118,6 +155,23 @@ def main():
                          "prefix sharing compose) — with "
                          "--attn-approx maxonly this is the paper's "
                          "comparator over a sliding bus")
+    ap.add_argument("--tp", type=int, default=None,
+                    help=">1: tensor-parallel trunk over a (1, N) "
+                         "'model' mesh — Megatron column/row weight "
+                         "layout, head-wise sharded KV pools, and the "
+                         "comparator head upgraded to its vocab-sharded "
+                         "form (only (val, idx) pairs cross shards at "
+                         "the head, never a logit row); outputs are "
+                         "bit-identical to --tp 1.  On a CPU host set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1: serve through a multi-replica Router — N "
+                         "independent engines behind one admission "
+                         "queue with session/prefix affinity routing "
+                         "and aggregated stats (serve/router.py); "
+                         "composes with --tp (each replica gets its own "
+                         "device slice when replicas*tp devices exist)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
                     help="instead of the batch run: start the SSE HTTP "
@@ -130,42 +184,57 @@ def main():
     if args.smoke:
         cfg = smoke_config(cfg)
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.tp is not None and args.tp > 1 \
+            and args.head_mode in ("reduced", "fused"):
+        # mirror the engine's tp upgrade HERE so the pre-resolved
+        # sampler the batch path submits (and the head_mode the spec
+        # path passes through SamplingParams) is the vocab-sharded
+        # comparator too, not just the engine default.
+        args.head_mode = "sharded"
     sampler = sampler_mod.resolve(args.head_mode, args.top_k,
                                   args.temperature, cfg=cfg)
     mesh = None
-    if sampler.needs_mesh:
+    if args.tp is not None:
+        # --tp builds (and validates) its own (1, N) mesh inside the
+        # engine (ServeEngine tp=); the legacy sharded-head mesh below
+        # would fight it over the 'model' axis size.
+        pass
+    elif sampler.needs_mesh:
         # vocab-sharded head: all devices on 'model'; the fused step's
         # batch size tracks the active-slot count, so the batch stays
         # replicated.
         mesh = mesh_mod.make_host_mesh(model=len(jax.devices()))
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas {args.replicas}: must be >= 1")
+    engine_kw = dict(n_slots=args.slots, max_len=args.max_len,
+                     eos_id=1, head_mode=args.head_mode,
+                     kv_layout=args.kv_layout, block_size=args.block_size,
+                     num_blocks=args.num_blocks, scheduler=args.scheduler,
+                     chunk_size=args.chunk_size,
+                     token_budget=args.token_budget,
+                     host_stride=args.host_stride,
+                     prefix_cache=args.prefix_cache,
+                     attn_approx=args.attn_approx,
+                     attn_window=args.attn_window,
+                     seed=args.seed)
     if args.serve_http is not None:
-        from repro.serve.api import LLM
         from repro.serve.server import serve_forever
 
-        llm = LLM(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                  eos_id=1, head_mode=args.head_mode,
-                  kv_layout=args.kv_layout, block_size=args.block_size,
-                  num_blocks=args.num_blocks, scheduler=args.scheduler,
-                  chunk_size=args.chunk_size,
-                  token_budget=args.token_budget,
-                  host_stride=args.host_stride,
-                  prefix_cache=args.prefix_cache,
-                  attn_approx=args.attn_approx,
-                  attn_window=args.attn_window,
-                  mesh=mesh, seed=args.seed)
+        if args.replicas > 1:
+            from repro.serve.router import Router
+
+            llm = Router(params, cfg, replicas=args.replicas, tp=args.tp,
+                         **engine_kw)
+        else:
+            from repro.serve.api import LLM
+
+            llm = LLM(params, cfg, tp=args.tp, mesh=mesh, **engine_kw)
         serve_forever(llm, host=args.http_host, port=args.serve_http)
         return
-    eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                      eos_id=1, head_mode=args.head_mode,
-                      kv_layout=args.kv_layout, block_size=args.block_size,
-                      num_blocks=args.num_blocks, scheduler=args.scheduler,
-                      chunk_size=args.chunk_size,
-                      token_budget=args.token_budget,
-                      host_stride=args.host_stride,
-                      prefix_cache=args.prefix_cache,
-                      attn_approx=args.attn_approx,
-                      attn_window=args.attn_window,
-                      mesh=mesh, seed=args.seed)
+    if args.replicas > 1:
+        _run_batch_router(args, cfg, params, engine_kw)
+        return
+    eng = ServeEngine(params, cfg, tp=args.tp, mesh=mesh, **engine_kw)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, 24))

@@ -139,6 +139,30 @@ def serve_param_specs(params, mesh: Mesh, cfg=None, *,
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def paged_pool_specs(pools, mesh: Mesh):
+    """Head-wise specs for the serving engine's paged KV pools.
+
+    Pool leaves are ``(L, num_blocks, block_size, Hkv, hd)``: shard the
+    kv-head axis over 'model' so each device scatters and attends only
+    its own head slice — the serving analogue of the Megatron head
+    partition the attention weights already use.  Head counts that do
+    not divide TP fall back to replication per leaf (the same drop rule
+    ``param_specs`` applies to weight dims), so high TP on smoke-sized
+    configs degrades gracefully instead of failing.
+    """
+    msize = mesh.shape.get("model", 1)
+    specs = []
+    for pool in pools:
+        if pool is None:
+            specs.append(None)
+            continue
+        hkv = int(pool.shape[3])
+        ax = ("model" if "model" in mesh.axis_names and msize > 1
+              and hkv % msize == 0 else None)
+        specs.append(P(None, None, None, ax, None))
+    return specs
+
+
 def batch_axes(mesh: Mesh, global_batch: int):
     """Largest prefix of ('pod','data') whose product divides the batch."""
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]

@@ -196,11 +196,14 @@ class LLM:
     # -- the facade ----------------------------------------------------------
     def generate(self, prompts,
                  params: Union[SamplingParams, Sequence[SamplingParams],
-                               None] = None) -> List[RequestOutput]:
+                               None] = None,
+                 sessions=None) -> List[RequestOutput]:
         """Serve prompt(s) to completion; outputs in prompt order.
 
         ``prompts``: one token-id sequence or a list of them.
         ``params``: one SamplingParams for all, or one per prompt.
+        ``sessions``: accepted for API parity with ``Router.generate``
+        (a single engine has nowhere to route, so it's a no-op).
         """
         if not isinstance(prompts, np.ndarray):
             prompts = list(prompts)           # materialize generators once
@@ -219,9 +222,11 @@ class LLM:
         return [RequestOutput.from_request(r) for r in reqs]
 
     def stream(self, prompt: PromptLike,
-               params: Optional[SamplingParams] = None
-               ) -> Iterator[TokenChunk]:
+               params: Optional[SamplingParams] = None,
+               session: Optional[str] = None) -> Iterator[TokenChunk]:
         """Submit one prompt (eagerly) and yield its tokens as emitted.
+        ``session`` is accepted for API parity with ``Router.stream``
+        (single engine — nothing to route).
 
         The final chunk carries ``finish_reason``.  Between yields the
         engine keeps serving every other in-flight request — inline
@@ -281,3 +286,27 @@ class LLM:
 
     def kv_usage(self) -> dict:
         return self.engine.store.usage()
+
+    def health(self) -> dict:
+        """Liveness payload for GET /healthz — the single-engine form of
+        the surface ``serve.router.Router.health`` provides for a fleet
+        (the HTTP handler consumes either, duck-typed)."""
+        err = self._pump_error
+        if err is not None:
+            return {"ok": False, "error": f"engine pump died: {err}"}
+        return {"ok": True, "pumping": self._pumping,
+                "has_work": self.engine.has_work}
+
+    def stats_payload(self) -> dict:
+        """The GET /v1/stats shape: aggregate engine + kv stats plus a
+        per-replica breakdown.  A single LLM IS a one-replica fleet, so
+        the aggregate equals the sole replica's stats and the invariant
+        ``engine.X == sum(replicas[i].engine.X)`` holds trivially —
+        multi-replica aggregation lives in ``serve.router``."""
+        with self._lock:
+            snap = self.engine.snapshot()
+            usage = self.engine.store.usage()
+        return {"engine": snap, "kv": usage,
+                "replicas": [{"replica": 0, "engine": snap, "kv": usage,
+                              "healthy": self._pump_error is None,
+                              "draining": False}]}

@@ -208,11 +208,21 @@ def _jitted_step(cfg: ModelConfig, samplers: tuple, treedef,
         outs = tuple(s.head(params, cfg, hl[r])
                      for s, r in zip(samplers, rows))
         if spec_pallas is not None:
-            from repro.kernels import ops as kernel_ops
-
             w = sampler_mod._head_weight(params, cfg)
-            outs = outs + (kernel_ops.verify_draft(
-                h[spec_rows], w, spec_cand, use_pallas=spec_pallas),)
+            if spec_pallas == "sharded":
+                # vocab-sharded verify unit: per-position per-shard
+                # comparator + (val, idx) combine — same accept rule,
+                # O(shards) pairs per position on the wire.
+                from repro.core import reduced_softmax
+
+                outs = outs + (reduced_softmax.sharded_verify_draft(
+                    h[spec_rows], w, spec_cand, env.current_mesh(),
+                    use_pallas=cfg.use_pallas),)
+            else:
+                from repro.kernels import ops as kernel_ops
+
+                outs = outs + (kernel_ops.verify_draft(
+                    h[spec_rows], w, spec_cand, use_pallas=spec_pallas),)
         new_pools, new_denses = [], []
         for m, leaf in zip(paged_mask, jax.tree.flatten(new_cache)[0]):
             new_pools.append(leaf if m else None)
@@ -326,7 +336,8 @@ class ServeEngine:
                  host_stride: Optional[int] = None,
                  prefix_cache: bool = True,
                  attn_approx: Optional[str] = None,
-                 attn_window: Optional[int] = None):
+                 attn_window: Optional[int] = None,
+                 tp: Optional[int] = None):
         # Approximate attention: the kwargs are a convenience over the
         # ModelConfig fields (sentinel None = keep whatever the caller's
         # cfg says, so a cfg already carrying a mode isn't clobbered).
@@ -341,6 +352,45 @@ class ServeEngine:
                 attn_window if attn_window is not None else cfg.attn_window)
             cfg = dataclasses.replace(cfg, attn_approx=mode,
                                       attn_window=win)
+        # Tensor parallelism (tp=N): shard the TRUNK over N devices on a
+        # (1, N) 'model' mesh — Megatron column/row weight layout
+        # (serve_param_specs: column-parallel QKV/up-gate, row-parallel
+        # out/down, heads partitioned) with head-wise paged KV pools —
+        # and upgrade the default comparator head to its SHARDED form,
+        # so the only cross-shard traffic at the head is the tiny
+        # (val, idx) combine, never a vocab-wide logit row.  The jitted
+        # step bodies are unchanged: params/pools enter as committed
+        # sharded arrays and GSPMD propagates the layout, so the ONE
+        # jitted call per iteration contract is preserved.
+        if tp is not None and tp < 1:
+            raise ValueError(f"tp={tp}: must be >= 1 (or None)")
+        if tp is not None and tp > 1:
+            n_dev = len(jax.devices())
+            if n_dev < tp:
+                raise ValueError(
+                    f"tp={tp} needs {tp} devices; only {n_dev} visible "
+                    "(on a CPU host set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={tp} "
+                    "before jax initializes)")
+            if mesh is None:
+                from repro import compat
+                mesh = compat.make_mesh((1, tp), ("data", "model"),
+                                        devices=jax.devices()[:tp])
+            elif int(mesh.shape.get("model", 1)) != tp:
+                raise ValueError(
+                    f"tp={tp} but the given mesh's 'model' axis is "
+                    f"{mesh.shape.get('model', 1)}; pass ONE of tp= or "
+                    "a matching mesh=")
+            if head_mode in ("reduced", "fused"):
+                head_mode = "sharded"
+            from repro.parallel import sharding as shard_rules
+            params = jax.device_put(
+                params,
+                shard_rules.named(
+                    shard_rules.serve_param_specs(params, mesh, cfg),
+                    mesh))
+        self.tp = int(tp) if tp is not None else (
+            int(mesh.shape.get("model", 1)) if mesh is not None else 1)
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -384,6 +434,12 @@ class ServeEngine:
         self.store = PagedKVStore(
             params, cfg, n_slots=n_slots, max_len=max_len,
             block_size=block_size, num_blocks=num_blocks, layout=kv_layout)
+        if self.tp > 1 and self.store.any_paged:
+            # paged pools sharded HEAD-WISE over 'model': each device
+            # scatters / attends only its own kv-head slice (head counts
+            # that don't divide TP replicate per leaf — graceful, like
+            # the weight-dim drop rule).
+            self.store.shard_pools(self.mesh)
         # the approximate score functions / mask window live in the
         # PAGED decode path only — on a dense/ring layout the knob would
         # be silently ignored, which is worse than refusing.
@@ -567,11 +623,11 @@ class ServeEngine:
                     "available on a host_stride engine: the device loop "
                     "consumes the k-winner bus on device and ships only "
                     "sampled token ids")
-            if req.sampler.needs_mesh:
-                raise ValueError(
-                    f"{req.sampler} cannot ride host_stride="
-                    f"{self.host_stride}: the sharded head needs an "
-                    "ambient mesh the device loop does not thread")
+            # sharded heads ride the device loop fine: the engine wraps
+            # every dispatch in env.use_mesh, so the head's shard_map
+            # traces against the ambient mesh inside the while_loop
+            # body too (the submit-time needs_mesh/mesh check above
+            # already guaranteed a mesh exists).
             if type(req.sampler).sample_device is Sampler.sample_device:
                 raise ValueError(
                     f"{req.sampler} has no device sampling form "
@@ -591,7 +647,8 @@ class ServeEngine:
             # and the fused scheduler (the cohort baseline predates the
             # multi-token step).
             if not (isinstance(req.sampler, sampler_mod.Greedy)
-                    and req.sampler.head_mode in ("reduced", "fused")):
+                    and req.sampler.head_mode in ("reduced", "fused",
+                                                  "sharded")):
                 raise ValueError(
                     f"spec_k={req.params.spec_k} requires the reduced "
                     f"comparator head (engine head_mode="
@@ -1030,7 +1087,11 @@ class ServeEngine:
         denses = self.store.dense_sub(padded)
         spec_pallas = spec_rows_op = spec_cand_op = None
         if spec_group:
-            spec_pallas = bool(self.cfg.use_pallas) or "fused" in spec_modes
+            # 'sharded' routes the verify bank through the per-shard
+            # comparator + combine; otherwise a bool picks Pallas vs ref.
+            spec_pallas = ("sharded" if "sharded" in spec_modes
+                           else bool(self.cfg.use_pallas)
+                           or "fused" in spec_modes)
             sg = spec_group + [spec_group[0]] \
                 * (_pow2(len(spec_group)) - len(spec_group))
             spec_rows_op = jnp.asarray(sg, jnp.int32)

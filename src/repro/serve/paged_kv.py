@@ -315,6 +315,25 @@ class PagedKVStore:
     def any_paged(self) -> bool:
         return any(self.paged_mask)
 
+    def shard_pools(self, mesh) -> None:
+        """Commit the paged pools to head-wise sharding over 'model':
+        each device holds (and scatters into) only its kv-head slice of
+        every pool.  The jitted steps take the pools as donated
+        operands, so the committed layout propagates through GSPMD and
+        ``write_back`` adopts equally-sharded outputs — no per-step
+        resharding.  Leaves whose head count does not divide TP stay
+        replicated (``paged_pool_specs``' drop rule)."""
+        from jax.sharding import NamedSharding
+
+        from repro.parallel import sharding as shard_rules
+
+        specs = shard_rules.paged_pool_specs(self.pools, mesh)
+        self.pools = [
+            pool if spec is None
+            else jax.device_put(pool, NamedSharding(mesh, spec))
+            for pool, spec in zip(self.pools, specs)
+        ]
+
     def usage(self) -> dict:
         """Pool occupancy snapshot (JSON-ready) — surfaced by the HTTP
         server's /v1/stats next to the engine counters."""

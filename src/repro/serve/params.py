@@ -37,7 +37,8 @@ caller attaches to a request — and the single thing
                     == t_i, Theorem 1 at K positions, zero softmax — so
                     1..spec_k+1 tokens emit per iteration, bit-identical
                     to spec_k=0.  Greedy-only (requires top_k == 1, a
-                    'reduced'/'fused' head and n_candidates == 0: the
+                    'reduced'/'fused'/'sharded' comparator head and
+                    n_candidates == 0: the
                     verification IS the comparator, and faking it under
                     the softmax baseline would poison every A/B claim).
                     Mutually exclusive with an engine's ``host_stride``
@@ -145,12 +146,13 @@ class SamplingParams:
                     f"spec_k={self.spec_k} requires greedy decoding: "
                     f"top_k == 1 and n_candidates == 0 (got top_k="
                     f"{self.top_k}, n_candidates={self.n_candidates})")
-            if self.head_mode not in (None, "reduced", "fused"):
+            if self.head_mode not in (None, "reduced", "fused", "sharded"):
                 raise ValueError(
                     f"spec_k={self.spec_k} verifies through the reduced "
                     f"comparator; head_mode={self.head_mode!r} is not "
-                    "supported (use 'reduced' or 'fused' — running it "
-                    "under the softmax baseline would fake the A/B)")
+                    "supported (use 'reduced', 'fused' or 'sharded' — "
+                    "running it under the softmax baseline would fake "
+                    "the A/B)")
 
     @property
     def greedy(self) -> bool:

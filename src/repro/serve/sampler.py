@@ -234,6 +234,10 @@ class TopK(Sampler):
     head_mode: str = "reduced"
     sample_k: Optional[int] = None
 
+    @property
+    def needs_mesh(self) -> bool:
+        return self.head_mode == "sharded"
+
     def validate(self, cfg: ModelConfig) -> None:
         k_cap = min(MAX_TOP_K, cfg.vocab_size)
         if not 1 <= self.k <= k_cap:
@@ -244,13 +248,14 @@ class TopK(Sampler):
         if self.sample_k is not None and not 1 <= self.sample_k <= self.k:
             raise ValueError(f"sample_k={self.sample_k} out of range "
                              f"[1, k={self.k}]")
-        if self.head_mode not in ("reduced", "fused"):
-            # the 'softmax' baseline and 'sharded' head have no top-k
-            # form yet — reject rather than silently substituting the
-            # reduced path (which would fake any baseline comparison).
+        if self.head_mode not in ("reduced", "fused", "sharded"):
+            # the 'softmax' baseline has no top-k form — reject rather
+            # than silently substituting the reduced path (which would
+            # fake any baseline comparison).
             raise ValueError(
                 f"top_k sampling is not implemented for head_mode="
-                f"{self.head_mode!r}; use 'reduced' or 'fused'")
+                f"{self.head_mode!r}; use 'reduced', 'fused' or "
+                "'sharded'")
 
     def device_form(self) -> "Sampler":
         # temperature and sample_k are host-only: strip both so requests
@@ -258,6 +263,19 @@ class TopK(Sampler):
         return dataclasses.replace(self, temperature=1.0, sample_k=None)
 
     def head(self, params, cfg: ModelConfig, h: jax.Array):
+        if self.head_mode == "sharded":
+            # Vocab-sharded k-winner bus: per-shard fused top-k + a
+            # k-pair (val, idx) table combine — O(shards * k) on the
+            # wire, bit-identical to the local bus.
+            from repro.parallel import env
+
+            mesh = env.current_mesh()
+            if mesh is None:
+                raise ValueError(
+                    "head_mode='sharded' needs env.use_mesh(mesh)")
+            return reduced_softmax.sharded_reduced_topk(
+                h, _head_weight(params, cfg), self.k, mesh,
+                data_axes=(), use_pallas=cfg.use_pallas)
         return reduced_softmax.fused_reduced_topk(
             h, _head_weight(params, cfg), self.k,
             use_pallas=cfg.use_pallas or self.head_mode == "fused")
@@ -378,11 +396,11 @@ def resolve(spec: Union[str, Sampler, "SamplingParams"], top_k: int = 1,
         # candidate ids ride the k-winner comparator bus: ship
         # max(top_k, n_candidates) survivors, sample from the first
         # top_k only (sample_k=1 is exact greedy — Theorem 1 holds).
-        if mode not in ("reduced", "fused"):
+        if mode not in ("reduced", "fused", "sharded"):
             raise ValueError(
                 f"n_candidates={p.n_candidates} needs the k-winner "
-                f"comparator bus (head_mode 'reduced' or 'fused'), not "
-                f"{mode!r}")
+                f"comparator bus (head_mode 'reduced', 'fused' or "
+                f"'sharded'), not {mode!r}")
         s = TopK(max(p.top_k, p.n_candidates), p.temperature, mode,
                  sample_k=p.top_k)
     elif isinstance(spec, Sampler):

@@ -21,19 +21,31 @@ Endpoints:
                         TokenChunk as the engine emits it, terminated by
                         ``data: [DONE]``.
 
-  GET /v1/stats             engine counters (prefills, prefill_chunks,
-                            decode_steps, iterations, fused_rows,
-                            completed, deferred, preemptions, drafted,
-                            accepted, acceptance_rate, host_syncs,
-                            emitted_tokens) + scheduler state
-                            (queue_depth, active_slots, ttft_ms_p50/p99,
-                            tokens_per_dispatch — emitted tokens per
-                            jitted host dispatch, the host_stride
-                            amortization metric) + KV-pool usage.
+  GET /v1/stats             {"engine": aggregate counters (prefills,
+                            prefill_chunks, decode_steps, iterations,
+                            fused_rows, completed, deferred,
+                            preemptions, drafted, accepted,
+                            acceptance_rate, host_syncs,
+                            emitted_tokens, queue_depth, active_slots,
+                            ttft_ms_p50/p99, tokens_per_dispatch),
+                            "kv": aggregate pool usage,
+                            "replicas": [per-replica engine+kv]}.
+                            Counters SUM over replicas, peaks MAX,
+                            ratios are recomputed from the summed
+                            terms and percentiles re-derived from the
+                            pooled samples (serve/router.py documents
+                            the merge rules), so the aggregate
+                            invariant engine.emitted_tokens ==
+                            Σ replicas[i].engine.emitted_tokens always
+                            holds; a single LLM reports one replica
+                            equal to the aggregate.
 
   GET /healthz              liveness: 200 {"ok": true, ...} while the
                             engine pump thread is healthy, 503 once it
-                            has died (load balancers probe this).
+                            has died (load balancers probe this).  A
+                            Router fleet is ok while at least one
+                            replica is healthy and not draining; the
+                            payload carries the per-replica states.
 
 Error responses — including 404s for unknown paths — are always JSON
 (``{"error": ...}``), never empty bodies.
@@ -48,7 +60,6 @@ from __future__ import annotations
 import json
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
-from repro.serve.api import LLM
 from repro.serve.params import SamplingParams
 
 _PARAM_KEYS = ("max_new_tokens", "temperature", "top_k", "seed", "stop",
@@ -70,7 +81,7 @@ def _chunk_json(chunk) -> dict:
 
 
 class _Handler(BaseHTTPRequestHandler):
-    llm: LLM = None            # bound by make_server
+    llm = None                 # LLM or Router; bound by make_server
     quiet: bool = True
 
     # -- plumbing ------------------------------------------------------------
@@ -100,20 +111,25 @@ class _Handler(BaseHTTPRequestHandler):
     def do_GET(self):
         if self.path == "/healthz":
             # liveness for load balancers: the server socket answering
-            # is not enough — the engine pump thread must be alive (or
-            # cleanly not started, for inline-stepping deployments) and
-            # must not have died on an engine error.
-            err = self.llm._pump_error
-            if err is not None:
-                return self._json(503, {"ok": False,
-                                        "error": f"engine pump died: {err}"})
-            return self._json(200, {"ok": True,
-                                    "pumping": self.llm._pumping,
-                                    "has_work": self.llm.engine.has_work})
+            # is not enough — the engine pump thread(s) must be alive
+            # (or cleanly not started, for inline-stepping deployments)
+            # and must not have died on an engine error.  ``health()``
+            # is the LLM/Router-common surface: a Router is healthy
+            # while ANY replica still accepts work (its payload carries
+            # the per-replica breakdown).
+            h = self.llm.health()
+            return self._json(200 if h.get("ok") else 503, h)
         if self.path != "/v1/stats":
             return self._json(404, {"error": f"unknown path {self.path}"})
-        self._json(200, {"engine": self.llm.stats,
-                         "kv": self.llm.kv_usage()})
+        # {"engine": aggregate, "kv": aggregate, "replicas": [...]}: the
+        # top-level engine/kv keys are the AGGREGATE over replicas
+        # (sums for counters, max for peaks, ratios recomputed from the
+        # summed terms, percentiles re-derived from pooled samples —
+        # serve/router.py aggregate_engine_stats documents the rules),
+        # so ``engine.emitted_tokens == sum(r.engine.emitted_tokens for
+        # r in replicas)`` holds by construction; on a single LLM the
+        # replicas list has one entry equal to the aggregate.
+        self._json(200, self.llm.stats_payload())
 
     def do_POST(self):
         if self.path != "/v1/completions":
@@ -130,14 +146,19 @@ class _Handler(BaseHTTPRequestHandler):
             params = params_from_json(body)
         except (ValueError, TypeError, json.JSONDecodeError) as e:
             return self._json(400, {"error": str(e)})
+        # optional session id: Router pins all requests of a session to
+        # one replica (KV prefix affinity across a conversation); a
+        # single LLM accepts and ignores it.
+        session = body.get("session")
         try:
             if body.get("stream"):
                 # submit (and validate params/prompt) BEFORE any headers
                 # go out: a resolve error must be a clean 400, not bytes
                 # inside an already-open 200 event stream
-                it = self.llm.stream(prompt, params)
+                it = self.llm.stream(prompt, params, session=session)
                 return self._stream(it)
-            out = self.llm.generate([prompt], params)[0]
+            out = self.llm.generate([prompt], params,
+                                    sessions=[session])[0]
             self._json(200, out.as_dict())
         except ValueError as e:           # bad params/config combination
             self._json(400, {"error": str(e)})
@@ -162,18 +183,20 @@ class _Handler(BaseHTTPRequestHandler):
             it.close()     # unfinished -> engine.cancel via the facade
 
 
-def make_server(llm: LLM, host: str = "127.0.0.1", port: int = 8000,
+def make_server(llm, host: str = "127.0.0.1", port: int = 8000,
                 quiet: bool = True) -> ThreadingHTTPServer:
-    """Bind (but don't run) the SSE server.  Starts the LLM's background
-    engine pump — handler threads never step the engine inline.  Pass
-    port=0 for an ephemeral port (``server.server_address``)."""
+    """Bind (but don't run) the SSE server over an ``LLM`` or a
+    ``serve.router.Router`` (duck-typed: generate/stream/health/
+    stats_payload/start_pump).  Starts the background engine pump(s) —
+    handler threads never step an engine inline.  Pass port=0 for an
+    ephemeral port (``server.server_address``)."""
     handler = type("Handler", (_Handler,), {"llm": llm, "quiet": quiet})
     srv = ThreadingHTTPServer((host, port), handler)
     llm.start_pump()
     return srv
 
 
-def serve_forever(llm: LLM, host: str = "127.0.0.1",
+def serve_forever(llm, host: str = "127.0.0.1",
                   port: int = 8000) -> None:
     srv = make_server(llm, host, port)
     h, p = srv.server_address[:2]

@@ -335,8 +335,9 @@ def test_resolve_is_the_only_string_switch():
         resolve("reduced", top_k=500, cfg=cfg)
     with pytest.raises(ValueError, match="top_k sampling"):
         resolve("softmax", top_k=4, cfg=cfg)
-    with pytest.raises(ValueError, match="top_k sampling"):
-        resolve("sharded", top_k=4, cfg=cfg)
+    # the k-winner bus HAS a sharded form (per-shard top-k + (val, idx)
+    # table combine) — resolves instead of rejecting
+    assert resolve("sharded", top_k=4, cfg=cfg) == TopK(4, 1.0, "sharded")
     # host-only fields never fragment a cohort / jit cache
     assert TopK(4, 0.9).device_form() == TopK(4, 1.0).device_form()
     assert Temperature(0.1).device_form() == Temperature(2.0).device_form()

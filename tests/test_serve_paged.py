@@ -474,8 +474,11 @@ def test_engine_submit_guards():
         eng.submit(Request(0, np.zeros(4, np.int32), 2, top_k=500))
     with pytest.raises(ValueError, match="max_len"):
         eng.submit(Request(0, np.zeros(30, np.int32), 2))
+    # top-k has reduced/fused/sharded comparator-bus forms; the softmax
+    # BASELINE still has none — reject rather than silently substituting
+    # the reduced path (which would fake any A/B)
     sh = ServeEngine(params, cfg, n_slots=1, max_len=16, eos_id=1,
-                     head_mode="sharded", mesh=make_host_mesh())
+                     head_mode="softmax", mesh=make_host_mesh())
     with pytest.raises(ValueError, match="top_k sampling"):
         sh.submit(Request(0, np.zeros(4, np.int32), 2, top_k=4))
     # unadmittable request: pool smaller than any prompt cover
